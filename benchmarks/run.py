@@ -1,0 +1,288 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``derived`` is the quantity the
+paper's table/figure reports (WA, conditional probability, reduction %);
+``us_per_call`` is the wall time of the producing computation.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--full] [--only exp1,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return (time.perf_counter() - t0) * 1e6, out
+
+
+def _pool(full):
+    from repro.core.volumes import default_pool
+    pool = default_pool(scale=2 if full else 1)
+    return pool if full else pool[:6]
+
+
+SEL_SCHEMES = ["nosep", "sepgc", "fk", "sepbit", "uw", "gw", "dac", "sfs",
+               "ml", "eti", "mq", "sfr", "fadac", "warcip"]
+
+
+def exp1_selection(full=False):
+    """Exp#1 (Fig 12): overall WA per scheme under Greedy & Cost-Benefit."""
+    from repro.core.simulator import simulate
+    from repro.core.volumes import overall_wa
+    pool = _pool(full)
+    for sel in ("greedy", "cost_benefit"):
+        for scheme in SEL_SCHEMES:
+            us, rs = _timed(lambda: [simulate(tr, scheme, segment_size=128,
+                                              selector=sel) for _, tr in pool])
+            _row(f"exp1/{sel}/{scheme}", us, f"WA={overall_wa(rs):.4f}")
+
+
+def exp2_segsize(full=False):
+    """Exp#2 (Fig 13): WA vs segment size at fixed 512MiB-equivalent GC IO."""
+    from repro.core.simulator import simulate
+    from repro.core.volumes import overall_wa
+    pool = _pool(full)
+    for seg, batch in ((32, 4), (64, 2), (128, 1)):
+        for scheme in ("nosep", "sepgc", "warcip", "sepbit", "fk"):
+            us, rs = _timed(lambda: [simulate(tr, scheme, segment_size=seg,
+                                              gc_batch_segments=batch,
+                                              selector="cost_benefit")
+                                     for _, tr in pool])
+            _row(f"exp2/seg{seg}/{scheme}", us, f"WA={overall_wa(rs):.4f}")
+
+
+def exp3_gp(full=False):
+    """Exp#3 (Fig 14): WA vs GP trigger threshold."""
+    from repro.core.simulator import simulate
+    from repro.core.volumes import overall_wa
+    pool = _pool(full)
+    for gp in (0.10, 0.15, 0.20, 0.25):
+        for scheme in ("nosep", "sepgc", "warcip", "sepbit", "fk"):
+            us, rs = _timed(lambda: [simulate(tr, scheme, segment_size=128,
+                                              gp_threshold=gp,
+                                              selector="cost_benefit")
+                                     for _, tr in pool])
+            _row(f"exp3/gp{int(gp*100)}/{scheme}", us, f"WA={overall_wa(rs):.4f}")
+
+
+def exp4_breakdown(full=False):
+    """Exp#4 (Fig 15): NoSep / SepGC / UW / GW / SepBIT breakdown + the
+    per-volume WA-reduction distribution vs SepGC."""
+    from repro.core.simulator import simulate
+    from repro.core.volumes import overall_wa
+    pool = _pool(full)
+    results = {}
+    for scheme in ("nosep", "sepgc", "uw", "gw", "sepbit"):
+        us, rs = _timed(lambda: [simulate(tr, scheme, segment_size=128,
+                                          selector="cost_benefit")
+                                 for _, tr in pool])
+        results[scheme] = rs
+        _row(f"exp4/{scheme}", us, f"WA={overall_wa(rs):.4f}")
+    red = [100 * (1 - a.wa / b.wa) for a, b in zip(results["sepbit"],
+                                                   results["sepgc"])]
+    _row("exp4/sepbit_vs_sepgc_reduction", 0,
+         f"median={np.median(red):.1f}%;max={max(red):.1f}%")
+
+
+def exp5_memory(full=False):
+    """Exp#5 (Fig 16): FIFO-queue memory vs a full LBA map."""
+    from repro.core.simulator import simulate
+    pool = _pool(full)
+    worst, snap = [], []
+    t0 = time.perf_counter()
+    for name, tr in pool:
+        r = simulate(tr, "sepbit", segment_size=128, selector="cost_benefit")
+        wss = r.wss_unique_lbas
+        if r.fifo_occupancy_peak:
+            worst.append(100 * (1 - r.fifo_occupancy_peak / wss))
+            snap.append(100 * (1 - r.fifo_occupancy_last / wss))
+    us = (time.perf_counter() - t0) * 1e6
+    _row("exp5/memory_reduction_worst", us,
+         f"median={np.median(worst):.1f}%;min={min(worst):.1f}%")
+    _row("exp5/memory_reduction_snapshot", 0,
+         f"median={np.median(snap):.1f}%;max={max(snap):.1f}%")
+
+
+def fig8_user_bit(full=False):
+    """Fig 8: closed-form Pr(u<=u0 | v<=v0) — checked against paper values."""
+    from repro.core.analysis import BLOCKS_PER_GIB as G, pr_user_bit
+    for (u0, v0, alpha, paper) in ((0.25, 4, 1.0, 77.1), (1, 0.25, 1.0, None),
+                                   (1, 4, 1.0, 87.1), (1, 1, 0.0, 9.5)):
+        us, p = _timed(lambda: pr_user_bit(u0 * G, v0 * G, alpha=alpha))
+        tag = f"paper={paper}" if paper else "n/a"
+        _row(f"fig8/u{u0}v{v0}a{alpha}", us, f"P={100*p:.1f}%;{tag}")
+
+
+def fig10_gc_bit(full=False):
+    """Fig 10: closed-form Pr(u<=g0+r0 | u>=g0)."""
+    from repro.core.analysis import BLOCKS_PER_GIB as G, pr_gc_bit
+    for (g0, r0, alpha, paper) in ((2, 8, 1.0, 41.2), (32, 8, 1.0, 14.9),
+                                   (2, 8, 0.2, None), (32, 8, 0.2, None)):
+        us, p = _timed(lambda: pr_gc_bit(g0 * G, r0 * G, alpha=alpha))
+        tag = f"paper={paper}" if paper else "n/a"
+        _row(f"fig10/g{g0}r{r0}a{alpha}", us, f"P={100*p:.1f}%;{tag}")
+
+
+def fig9_11_trace(full=False):
+    """Fig 9/11: empirical conditional probabilities on the volume pool."""
+    from repro.core.analysis import trace_conditional_gc, trace_conditional_user
+    pool = _pool(full)
+    n = int(max(tr.max() for _, tr in pool)) + 1
+    for v0f in (0.1, 0.4):
+        us, ps = _timed(lambda: [trace_conditional_user(tr, int(0.1 * n), int(v0f * n))
+                                 for _, tr in pool])
+        ps = [p for p in ps if np.isfinite(p)]
+        _row(f"fig9/v0={v0f}wss", us, f"median={100*np.median(ps):.1f}%")
+    for g0f in (0.1, 1.0):
+        us, ps = _timed(lambda: [trace_conditional_gc(tr, int(g0f * n), int(0.5 * n))
+                                 for _, tr in pool])
+        _row(f"fig11/g0={g0f}wss", us, f"median={100*np.median(ps):.1f}%")
+
+
+def obs_trace_analysis(full=False):
+    """§2.3 Observations 1-3 on the synthetic pool."""
+    pool = _pool(full)
+    t0 = time.perf_counter()
+    short_fracs, rare_fracs, cvs = [], [], []
+    for name, tr in pool:
+        n = int(tr.max()) + 1
+        last = np.full(n, -1, dtype=np.int64)
+        lifespans = []
+        count = np.zeros(n, dtype=np.int64)
+        per_lba_spans: dict = {}
+        for i, lba in enumerate(tr):
+            if last[lba] >= 0:
+                d = i - last[lba]
+                lifespans.append(d)
+                per_lba_spans.setdefault(lba, []).append(d)
+            last[lba] = i
+            count[lba] += 1
+        spans = np.asarray(lifespans)
+        short_fracs.append(100 * np.mean(spans < 0.5 * n) if len(spans) else 0)
+        rare_fracs.append(100 * np.mean(count[count > 0] <= 4))
+        hot = np.argsort(-count)[: max(n // 100, 1)]
+        cv = [np.std(per_lba_spans[l]) / np.mean(per_lba_spans[l])
+              for l in hot if l in per_lba_spans and len(per_lba_spans[l]) > 3]
+        if cv:
+            cvs.append(np.median(cv))
+    us = (time.perf_counter() - t0) * 1e6
+    _row("obs1/short_lifespan_frac", us, f"median={np.median(short_fracs):.1f}%")
+    _row("obs2/top1pct_lifespan_cv", 0, f"median={np.median(cvs):.2f}")
+    _row("obs3/rarely_updated_frac", 0, f"median={np.median(rare_fracs):.1f}%")
+
+
+def kv_wa(full=False):
+    """Beyond-paper: serving KV-compaction WA, SepBIT vs baselines."""
+    from repro.serving.scheduler import WorkloadConfig, compare_policies
+    w = WorkloadConfig(n_requests=2500 if full else 1200, max_batch=24, seed=5)
+    us, res = _timed(lambda: compare_policies(w, n_frames=64, pages_per_frame=32))
+    for policy, r in res.items():
+        _row(f"kv_wa/{policy}", us / 3, f"WA={r['wa']:.4f}")
+
+
+def ckpt_wa(full=False):
+    """Beyond-paper: checkpoint-store compaction WA, SepBIT vs NoSep."""
+    import shutil
+    import tempfile
+    from repro.checkpoint import LogBlobStore, LogStoreConfig
+    rng = np.random.default_rng(0)
+    for policy in ("nosep", "sepbit"):
+        root = tempfile.mkdtemp()
+        t0 = time.perf_counter()
+        store = LogBlobStore(root, LogStoreConfig(segment_bytes=1 << 15,
+                                                  gp_threshold=0.12,
+                                                  policy=policy))
+        steps = 120 if full else 60
+        for i in range(steps):
+            for k in range(6):
+                store.put(f"opt/{k}", rng.bytes(2048))     # churns every step
+            if i % 5 == 0:
+                store.put(f"ema/{i}", rng.bytes(4096))     # long-lived
+        us = (time.perf_counter() - t0) * 1e6
+        _row(f"ckpt_wa/{policy}", us, f"WA={store.write_amplification:.4f}")
+        shutil.rmtree(root)
+
+
+def jaxsim_throughput(full=False):
+    """TPU-resident simulator throughput (writes/s on this CPU host)."""
+    from repro.core.jaxsim import JaxSimConfig, simulate_jax
+    from repro.core.traces import zipf_trace
+    n = 1 << 10
+    tr = zipf_trace(n, 2 * n, alpha=1.0, seed=1)
+    cfg = JaxSimConfig(n_lbas=n, segment_size=32, scheme="sepbit")
+    simulate_jax(tr, cfg)  # compile
+    us, r = _timed(lambda: simulate_jax(tr, cfg))
+    _row("jaxsim/sepbit_cb", us, f"writes_per_s={1e6*len(tr)/us:.0f};WA={r['wa']:.3f}")
+
+
+def kernels(full=False):
+    """Pallas kernel interpret-mode validation timings."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    S = 1 << 14
+    n = jnp.asarray(rng.integers(1, 129, S), jnp.int32)
+    nv = jnp.minimum(jnp.asarray(rng.integers(0, 129, S), jnp.int32), n)
+    st = jnp.asarray(rng.integers(0, 10000, S), jnp.int32)
+    state = jnp.asarray(rng.integers(0, 3, S), jnp.int32)
+    t = jnp.int32(20000)
+    ops.segment_select(n, nv, st, state, t)  # compile
+    us, _ = _timed(lambda: ops.segment_select(n, nv, st, state, t)[0].block_until_ready())
+    _row("kernels/segsel_16k", us, "interpret-mode")
+    B, Hq, Hkv, D, S2 = 2, 8, 2, 128, 1024
+    q = jnp.asarray(rng.standard_normal((B, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S2, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S2, Hkv, D)), jnp.float32)
+    kl = jnp.full((B,), S2, jnp.int32)
+    ops.flash_decode(q, k, v, kl)
+    us, _ = _timed(lambda: ops.flash_decode(q, k, v, kl).block_until_ready())
+    _row("kernels/flash_decode_1k", us, "interpret-mode")
+
+
+def roofline(full=False):
+    """§Roofline summary from the dry-run artifact (if present)."""
+    path = os.environ.get("DRYRUN_JSON", ".cache/dryrun_all.json")
+    if not os.path.exists(path):
+        _row("roofline/skipped", 0, f"no {path}; run repro.launch.dryrun first")
+        return
+    from repro.roofline import build_table
+    for r in build_table(path):
+        _row(f"roofline/{r.arch}/{r.shape}", 0,
+             f"dom={r.dominant};useful={r.useful_ratio:.2f};"
+             f"roofline={100*r.roofline_fraction():.1f}%")
+
+
+BENCHES = {
+    "exp1": exp1_selection, "exp2": exp2_segsize, "exp3": exp3_gp,
+    "exp4": exp4_breakdown, "exp5": exp5_memory,
+    "fig8": fig8_user_bit, "fig10": fig10_gc_bit, "fig9_11": fig9_11_trace,
+    "obs": obs_trace_analysis, "kv_wa": kv_wa, "ckpt_wa": ckpt_wa,
+    "jaxsim": jaxsim_throughput, "kernels": kernels, "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="benchmark-grade sizes")
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args, _ = ap.parse_known_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in names:
+        BENCHES[name](full=args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""End-to-end serving driver: batched generation through the SepBIT paged
+KV store (the paper's placement algorithm running as the serving memory
+manager).
+
+Serves a reduced-config model with continuous batching; every sequence's KV
+pages are placed by SepBIT; compaction WA and throughput are reported and
+compared against NoSep placement.
+
+    PYTHONPATH=src python examples/serve_paged.py [--arch stablelm-1.6b]
+        [--requests 48] [--policy sepbit]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.distributed import null_sharder
+from repro.models import build_model
+from repro.serving.engine import make_decode_fn, make_prefill_fn
+from repro.serving.logkv import LogKVConfig, LogKVStore
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--page-tokens", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=96)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    model = build_model(cfg)
+    sharder = null_sharder(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    prefill = jax.jit(make_prefill_fn(model, cfg, sharder))
+    decode = jax.jit(make_decode_fn(model, cfg, sharder))
+
+    rng = np.random.default_rng(0)
+    # heavy-tailed decode lengths (chat + long-form mixture)
+    lengths = np.where(rng.random(args.requests) < 0.25,
+                       rng.geometric(1 / 48.0, args.requests),
+                       rng.geometric(1 / 8.0, args.requests)).clip(1, args.max_new)
+    prompts = rng.integers(0, cfg.vocab, (args.requests, args.prompt_len))
+
+    results = {}
+    for policy in ("nosep", "sepbit"):
+        store = LogKVStore(LogKVConfig(n_frames=48, pages_per_frame=16,
+                                       policy=policy))
+        B = args.max_batch
+        max_seq = args.prompt_len + args.max_new + 8
+        cache = model.init_cache(B, max_seq)
+        queue = list(range(args.requests))
+        slots = [None] * B          # request id per batch row
+        remaining = np.zeros(B, dtype=np.int64)
+        tok_count = 0
+        t0 = time.perf_counter()
+        cur = jnp.zeros((B, 1), jnp.int32)
+
+        while queue or any(s is not None for s in slots):
+            # admit new requests into free slots (batch prefill per slot)
+            for b in range(B):
+                if slots[b] is None and queue:
+                    req = queue.pop()
+                    slots[b] = req
+                    remaining[b] = lengths[req]
+                    # prefill this row (whole-batch prefill; rows are
+                    # independent — row b's cache slice is what matters)
+                    lg, cache = prefill(
+                        params, {"tokens": jnp.asarray(
+                            np.tile(prompts[req], (B, 1)))}, cache)
+                    cur = cur.at[b, 0].set(jnp.argmax(lg[b]).astype(jnp.int32))
+                    for _ in range(args.prompt_len // args.page_tokens):
+                        store.append_page(req)
+            live = [b for b in range(B) if slots[b] is not None]
+            if not live:
+                break
+            nxt, _, cache = decode(params, cur, cache)
+            cur = nxt[:, None]
+            tok_count += len(live)
+            for b in live:
+                remaining[b] -= 1
+                if remaining[b] % args.page_tokens == 0:
+                    store.append_page(slots[b])
+                if remaining[b] <= 0:
+                    store.finish_sequence(slots[b])
+                    slots[b] = None
+        dt = time.perf_counter() - t0
+        st = store.stats()
+        results[policy] = (st["wa"], tok_count / dt)
+        print(f"{policy:7s}: compaction WA={st['wa']:.3f} "
+              f"gc_pages={st['gc_writes']} throughput={tok_count/dt:,.0f} tok/s")
+
+    wa_n, _ = results["nosep"]
+    wa_s, _ = results["sepbit"]
+    print(f"\nSepBIT cuts KV-compaction copy traffic by "
+          f"{100*(1 - wa_s/wa_n):.1f}% on this workload.")
+
+
+if __name__ == "__main__":
+    main()

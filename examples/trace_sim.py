@@ -1,0 +1,54 @@
+"""Full placement-scheme comparison on a chosen workload (paper Exp#1 CLI).
+
+    PYTHONPATH=src python examples/trace_sim.py --workload mixed --alpha 1.0 \
+        --selector cost_benefit [--schemes sepbit,dac,fk] [--alibaba-csv path]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core.placement import SCHEMES
+from repro.core.simulator import simulate
+from repro.core.traces import GENERATORS, load_alibaba_csv, trace_stats
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="mixed", choices=list(GENERATORS))
+    ap.add_argument("--alpha", type=float, default=1.0)
+    ap.add_argument("--n-lbas", type=int, default=1 << 14)
+    ap.add_argument("--traffic", type=float, default=8.0, help="× WSS")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--segment", type=int, default=128)
+    ap.add_argument("--gp", type=float, default=0.15)
+    ap.add_argument("--selector", default="cost_benefit",
+                    choices=["greedy", "cost_benefit"])
+    ap.add_argument("--schemes", default=",".join(SCHEMES))
+    ap.add_argument("--alibaba-csv", default=None,
+                    help="replay a real Alibaba-format block trace instead")
+    args = ap.parse_args()
+
+    if args.alibaba_csv:
+        trace = load_alibaba_csv(args.alibaba_csv)
+    else:
+        gen = GENERATORS[args.workload]
+        kw = {"seed": args.seed}
+        if args.workload in ("zipf", "shifting", "mixed", "bursty"):
+            kw["alpha"] = args.alpha
+        trace = gen(args.n_lbas, int(args.traffic * args.n_lbas), **kw)
+    print("workload:", trace_stats(trace))
+
+    print(f"\n{'scheme':8s} {'WA':>8s} {'gc_writes':>10s} {'wall_s':>7s}")
+    rows = []
+    for scheme in args.schemes.split(","):
+        r = simulate(trace, scheme, segment_size=args.segment,
+                     gp_threshold=args.gp, selector=args.selector)
+        rows.append((r.wa, scheme))
+        print(f"{scheme:8s} {r.wa:8.4f} {r.gc_writes:10d} {r.wall_seconds:7.2f}")
+    best = min(rows)
+    print(f"\nbest: {best[1]} (WA={best[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

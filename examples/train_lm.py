@@ -1,0 +1,72 @@
+"""End-to-end training driver with fault tolerance.
+
+Trains a reduced-config LM on the synthetic pipeline for a few hundred steps,
+checkpointing through the SepBIT log-structured blob store; ``--resume``
+restarts from the latest manifest (kill it mid-run and resume to see the
+crash path).
+
+    PYTHONPATH=src python examples/train_lm.py --arch phi3-mini-3.8b \
+        --steps 300 --ckpt-dir /tmp/ckpt [--resume]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import smoke_config
+from repro.distributed import null_sharder
+from repro.models import build_model
+from repro.training import (AdamWConfig, DataConfig, SyntheticLM,
+                            init_train_state, make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-mini-3.8b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    model = build_model(cfg)
+    sharder = null_sharder(cfg)
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)
+    state = init_train_state(model, cfg, opt_cfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model, cfg, sharder, opt_cfg))
+    data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                  global_batch=args.batch))
+    cm = CheckpointManager(args.ckpt_dir, keep=2)
+
+    start = 0
+    if args.resume and cm.latest_step() is not None:
+        state, manifest = cm.restore(state)
+        start = manifest["step"] + 1
+        print(f"resumed from step {manifest['step']}")
+
+    t0 = time.perf_counter()
+    for step in range(start, args.steps):
+        toks, labels = data.batch(step)
+        state, metrics = step_fn(state, {"tokens": jnp.asarray(toks),
+                                         "labels": jnp.asarray(labels)})
+        if step % 20 == 0 or step == args.steps - 1:
+            dt = time.perf_counter() - t0
+            print(f"step {step:4d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"lr={float(metrics['lr']):.2e} ({dt:.1f}s)")
+        if step and step % args.ckpt_every == 0:
+            cm.save(step, state, async_save=True)
+    cm.save(args.steps - 1, state)
+    cm.wait()
+    print(f"done; checkpoint-store WA={cm.store.write_amplification:.3f} "
+          f"(SepBIT-placed blobs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Checkpointing: SepBIT log-structured blob store + atomic manifests."""
+from .ckpt import CheckpointManager
+from .logstore import LogBlobStore, LogStoreConfig
+
+__all__ = ["CheckpointManager", "LogBlobStore", "LogStoreConfig"]

@@ -1,0 +1,6 @@
+"""Per-architecture configs (exact assigned dimensions) + registry."""
+from .base import SHAPES, ArchConfig, MoEConfig, ShapeConfig, shape_applicable
+from .registry import ARCH_IDS, get_config, smoke_config
+
+__all__ = ["SHAPES", "ArchConfig", "MoEConfig", "ShapeConfig",
+           "shape_applicable", "ARCH_IDS", "get_config", "smoke_config"]

@@ -1,0 +1,10 @@
+"""stablelm-1.6b [hf:stabilityai/stablelm-2-1_6b; unverified] — partial rotary (25%), LayerNorm."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-1.6b", family="dense",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=5632,
+    vocab=100352, head_dim=64,
+    norm="layernorm", mlp="swiglu", pos="rope", rope_fraction=0.25,
+    source="hf:stabilityai/stablelm-2-1_6b; unverified",
+)

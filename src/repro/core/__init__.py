@@ -1,0 +1,13 @@
+"""Core: the paper's contribution — BIT-inference data placement (SepBIT),
+baselines, GC policies, and trace-driven + JAX-native simulators."""
+
+from .blockstore import INF, Segment, Volume
+from .gc import GCPolicy, SELECTORS
+from .placement import SCHEMES, Placement, make_placement
+from .simulator import SimResult, annotate_next_write, simulate
+
+__all__ = [
+    "INF", "Segment", "Volume", "GCPolicy", "SELECTORS",
+    "SCHEMES", "Placement", "make_placement",
+    "SimResult", "annotate_next_write", "simulate",
+]

@@ -1,0 +1,142 @@
+"""Closed-form BIT-inference analysis under Zipf workloads (paper §3.2-§3.3).
+
+These are the paper's Figures 8 and 10, computed exactly:
+
+  Pr(v <= v0)              = Σ_i (1 - (1-p_i)^v0) p_i
+  Pr(u <= u0 and v <= v0)  = Σ_i (1 - (1-p_i)^u0)(1 - (1-p_i)^v0) p_i
+  Pr(g0 <= u <= g0+r0)     = Σ_i p_i ((1-p_i)^g0 - (1-p_i)^(g0+r0))
+  Pr(u >= g0)              = Σ_i p_i (1-p_i)^g0
+
+with p_i the Zipf pmf. (1-p)^e is computed as exp(e*log1p(-p)) for numerical
+stability at e ~ 2^20+. The paper's unit convention: 1 GiB = 2^18 4 KiB
+blocks; the paper fixes n = 10 * 2^18 (a 10 GiB working set).
+
+``kernels/zipfprob`` reimplements the inner reduction as a Pallas TPU kernel;
+this module is its oracle.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .traces import zipf_probs
+
+BLOCKS_PER_GIB = 2 ** 18
+PAPER_N = 10 * BLOCKS_PER_GIB
+
+
+def _pow_term(p: np.ndarray, e: float) -> np.ndarray:
+    """(1-p)^e, stable for large e."""
+    return np.exp(e * np.log1p(-p))
+
+
+def pr_user_bit(u0: float, v0: float, n: int = PAPER_N, alpha: float = 1.0,
+                probs: np.ndarray | None = None) -> float:
+    """Pr(u <= u0 | v <= v0): a user write that invalidates a block of
+    lifespan <= v0 itself has lifespan <= u0 (Fig 8). u0/v0 in blocks."""
+    p = zipf_probs(n, alpha) if probs is None else probs
+    pv = 1.0 - _pow_term(p, v0)
+    pu = 1.0 - _pow_term(p, u0)
+    den = float(np.sum(pv * p))
+    num = float(np.sum(pu * pv * p))
+    return num / den if den > 0 else 0.0
+
+
+def pr_gc_bit(g0: float, r0: float, n: int = PAPER_N, alpha: float = 1.0,
+              probs: np.ndarray | None = None) -> float:
+    """Pr(u <= g0 + r0 | u >= g0): a GC-rewritten block of age g0 has
+    residual lifespan <= r0 (Fig 10). g0/r0 in blocks."""
+    p = zipf_probs(n, alpha) if probs is None else probs
+    den = float(np.sum(p * _pow_term(p, g0)))
+    num = float(np.sum(p * (_pow_term(p, g0) - _pow_term(p, g0 + r0))))
+    return num / den if den > 0 else 0.0
+
+
+def fig8a_grid(n: int = PAPER_N, alpha: float = 1.0,
+               u0_gib=(0.25, 0.5, 1, 2, 4), v0_gib=(0.25, 0.5, 1, 2, 4)) -> dict:
+    """Fig 8(a): Pr(u<=u0 | v<=v0) over a (u0, v0) grid at fixed alpha."""
+    probs = zipf_probs(n, alpha)
+    return {
+        (u0, v0): pr_user_bit(u0 * BLOCKS_PER_GIB, v0 * BLOCKS_PER_GIB, n, alpha, probs)
+        for u0 in u0_gib for v0 in v0_gib
+    }
+
+
+def fig8b_curve(n: int = PAPER_N, u0_gib: float = 1.0,
+                v0_gib=(0.25, 0.5, 1, 2, 4),
+                alphas=(0.0, 0.2, 0.4, 0.6, 0.8, 1.0)) -> dict:
+    """Fig 8(b): Pr(u<=u0 | v<=v0) versus alpha at fixed u0."""
+    out = {}
+    for a in alphas:
+        probs = zipf_probs(n, a)
+        for v0 in v0_gib:
+            out[(a, v0)] = pr_user_bit(u0_gib * BLOCKS_PER_GIB,
+                                       v0 * BLOCKS_PER_GIB, n, a, probs)
+    return out
+
+
+def fig10a_grid(n: int = PAPER_N, alpha: float = 1.0,
+                g0_gib=(2, 4, 8, 16, 32), r0_gib=(1, 2, 4, 8)) -> dict:
+    """Fig 10(a): Pr(u<=g0+r0 | u>=g0) over a (g0, r0) grid at fixed alpha."""
+    probs = zipf_probs(n, alpha)
+    return {
+        (g0, r0): pr_gc_bit(g0 * BLOCKS_PER_GIB, r0 * BLOCKS_PER_GIB, n, alpha, probs)
+        for g0 in g0_gib for r0 in r0_gib
+    }
+
+
+def fig10b_curve(n: int = PAPER_N, r0_gib: float = 8.0,
+                 g0_gib=(2, 4, 8, 16, 32),
+                 alphas=(0.0, 0.2, 0.4, 0.6, 0.8, 1.0)) -> dict:
+    """Fig 10(b): Pr(u<=g0+r0 | u>=g0) versus alpha at fixed r0."""
+    out = {}
+    for a in alphas:
+        probs = zipf_probs(n, a)
+        for g0 in g0_gib:
+            out[(a, g0)] = pr_gc_bit(g0 * BLOCKS_PER_GIB,
+                                     r0_gib * BLOCKS_PER_GIB, n, a, probs)
+    return out
+
+
+def trace_conditional_user(trace: np.ndarray, u0: int, v0: int) -> float:
+    """Empirical Pr(u<=u0 | v<=v0) from a trace (paper Fig 9): over update
+    requests whose invalidated predecessor lived <= v0, the fraction whose own
+    lifespan is <= u0."""
+    n = int(trace.max()) + 1
+    last = np.full(n, -1, dtype=np.int64)
+    lifespans = np.full(len(trace), -1, dtype=np.int64)  # lifespan of version written at i
+    prev_idx = np.full(len(trace), -1, dtype=np.int64)   # index of invalidated version
+    for i, lba in enumerate(trace):
+        j = last[lba]
+        if j >= 0:
+            lifespans[j] = i - j
+            prev_idx[i] = j
+        last[lba] = i
+    # select update requests (they invalidated something) with v <= v0
+    upd = prev_idx >= 0
+    v = np.where(upd, lifespans[np.maximum(prev_idx, 0)], -1)
+    sel = upd & (v >= 0) & (v <= v0)
+    if not np.any(sel):
+        return float("nan")
+    u = lifespans[sel]  # -1 = never invalidated (treat as > u0)
+    return float(np.mean((u >= 0) & (u <= u0)))
+
+
+def trace_conditional_gc(trace: np.ndarray, g0: int, r0: int) -> float:
+    """Empirical Pr(u<=g0+r0 | u>=g0) from a trace (paper Fig 11)."""
+    n = int(trace.max()) + 1
+    last = np.full(n, -1, dtype=np.int64)
+    lifespans = np.full(len(trace), -1, dtype=np.int64)
+    for i, lba in enumerate(trace):
+        j = last[lba]
+        if j >= 0:
+            lifespans[j] = i - j
+        last[lba] = i
+    # versions never invalidated have effective lifespan = end-of-trace horizon
+    horizon = len(trace)
+    idx = np.arange(len(trace))
+    u = np.where(lifespans >= 0, lifespans, horizon - idx)
+    sel = u >= g0
+    if not np.any(sel):
+        return float("nan")
+    return float(np.mean(u[sel] <= g0 + r0))

@@ -1,0 +1,158 @@
+"""Log-structured volume model (paper §2.1).
+
+A volume is an append-only log divided into fixed-size segments. Each block is
+identified by an LBA; updates are out-of-place: the new version is appended to
+an *open* segment and the old version is invalidated in its sealed/open
+segment. All units are abstract "blocks" (the paper's 4 KiB); timestamps are
+user-write sequence numbers, so a "lifespan in bytes" is a difference of
+timestamps in block units.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+INF = np.iinfo(np.int64).max // 4  # stand-in for +inf lifespans/timestamps
+
+
+class Segment:
+    """A segment: up to ``size`` block slots, each slot holds (lba, utime).
+
+    ``utime`` is the *last user write time* of the block — preserved verbatim
+    across GC rewrites (paper §3.4: stored as on-disk metadata alongside the
+    block), so SepBIT's age ``g = t - utime`` is exact after any number of
+    rewrites.
+    """
+
+    __slots__ = (
+        "sid", "cls", "size", "n", "n_valid", "lbas", "utime", "valid",
+        "creation_time", "seal_time", "from_gc",
+    )
+
+    def __init__(self, sid: int, cls: int, size: int, creation_time: int):
+        self.sid = sid
+        self.cls = cls
+        self.size = size
+        self.n = 0                    # occupied slots
+        self.n_valid = 0              # still-live slots
+        self.lbas = np.empty(size, dtype=np.int64)
+        self.utime = np.empty(size, dtype=np.int64)
+        self.valid = np.zeros(size, dtype=bool)
+        self.creation_time = creation_time
+        self.seal_time = -1
+        self.from_gc = np.zeros(size, dtype=bool)  # slot written by GC rewrite
+
+    @property
+    def full(self) -> bool:
+        return self.n >= self.size
+
+    @property
+    def garbage(self) -> int:
+        return self.n - self.n_valid
+
+    def append(self, lba: int, utime: int, from_gc: bool) -> int:
+        off = self.n
+        self.lbas[off] = lba
+        self.utime[off] = utime
+        self.valid[off] = True
+        self.from_gc[off] = from_gc
+        self.n = off + 1
+        self.n_valid += 1
+        return off
+
+    def live_blocks(self):
+        """Return (lbas, utimes, from_gc) arrays of the valid blocks."""
+        m = self.valid[: self.n]
+        return self.lbas[: self.n][m], self.utime[: self.n][m], self.from_gc[: self.n][m]
+
+
+class Volume:
+    """Append-only volume state shared by every placement scheme.
+
+    Tracks per-LBA location so updates invalidate their predecessor, and
+    global valid/occupied counters for the GP trigger. The placement scheme
+    only chooses *which class's open segment* receives each block.
+    """
+
+    def __init__(self, n_lbas: int, segment_size: int, n_classes: int):
+        self.n_lbas = n_lbas
+        self.segment_size = segment_size
+        self.n_classes = n_classes
+        self.loc_seg = np.full(n_lbas, -1, dtype=np.int64)   # lba -> segment id
+        self.loc_off = np.full(n_lbas, -1, dtype=np.int64)   # lba -> slot
+        self.last_user_write = np.full(n_lbas, -INF, dtype=np.int64)
+        self.segments: dict[int, Segment] = {}
+        self.sealed: list[Segment] = []
+        self.open: list[Segment | None] = [None] * n_classes
+        self._next_sid = 0
+        self.t = 0                      # global user-write timestamp (blocks)
+        self.total_occupied = 0         # slots holding (valid or invalid) data
+        self.total_valid = 0
+        self.user_writes = 0
+        self.gc_writes = 0
+        self.segments_reclaimed = 0
+
+    # -- segment lifecycle -------------------------------------------------
+    def _new_open(self, cls: int) -> Segment:
+        seg = Segment(self._next_sid, cls, self.segment_size, self.t)
+        self._next_sid += 1
+        self.segments[seg.sid] = seg
+        self.open[cls] = seg
+        return seg
+
+    def open_segment(self, cls: int) -> Segment:
+        seg = self.open[cls]
+        if seg is None:
+            seg = self._new_open(cls)
+        return seg
+
+    def seal(self, seg: Segment) -> None:
+        seg.seal_time = self.t
+        self.sealed.append(seg)
+        self.open[seg.cls] = None
+
+    # -- block ops -----------------------------------------------------------
+    def invalidate(self, lba: int) -> int:
+        """Invalidate the current version of ``lba``. Returns its lifespan
+        ``v = t - last_user_write`` (INF if this is a new write)."""
+        sid = self.loc_seg[lba]
+        if sid < 0:
+            return INF
+        seg = self.segments[sid]
+        off = self.loc_off[lba]
+        seg.valid[off] = False
+        seg.n_valid -= 1
+        self.total_valid -= 1
+        v = self.t - self.last_user_write[lba]
+        return int(v)
+
+    def append(self, cls: int, lba: int, utime: int, from_gc: bool) -> Segment:
+        seg = self.open_segment(cls)
+        off = seg.append(lba, utime, from_gc)
+        self.loc_seg[lba] = seg.sid
+        self.loc_off[lba] = off
+        self.total_occupied += 1
+        self.total_valid += 1
+        if seg.full:
+            self.seal(seg)
+        return seg
+
+    def release(self, seg: Segment) -> None:
+        """Reclaim a fully-processed GC victim segment."""
+        self.total_occupied -= seg.n
+        self.sealed.remove(seg)
+        del self.segments[seg.sid]
+        self.segments_reclaimed += 1
+
+    # -- stats ---------------------------------------------------------------
+    @property
+    def garbage_proportion(self) -> float:
+        if self.total_occupied == 0:
+            return 0.0
+        return 1.0 - self.total_valid / self.total_occupied
+
+    @property
+    def write_amplification(self) -> float:
+        if self.user_writes == 0:
+            return 1.0
+        return (self.user_writes + self.gc_writes) / self.user_writes

@@ -1,0 +1,79 @@
+"""GC segment-selection policies (paper §2.1, §5).
+
+Selection operates over *sealed* segments only. Both policies are expressed as
+vectorized scores so the same code path backs the numpy simulator and serves
+as the oracle for the ``kernels/segsel`` Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .blockstore import Segment, Volume
+
+
+def greedy_scores(n: np.ndarray, n_valid: np.ndarray, seal_time: np.ndarray,
+                  creation_time: np.ndarray, t: int) -> np.ndarray:
+    """Greedy [24]: maximize garbage proportion."""
+    n = np.maximum(n, 1)
+    return (n - n_valid) / n
+
+
+def cost_benefit_scores(n: np.ndarray, n_valid: np.ndarray, seal_time: np.ndarray,
+                        creation_time: np.ndarray, t: int) -> np.ndarray:
+    """Cost-Benefit [24, 25]: maximize (1-u) * age / (1+u).
+
+    ``u`` is the live fraction; ``age`` is the time since the segment was
+    sealed (the youngest data it contains). Reading the segment costs 1,
+    writing back the live fraction costs u, hence 1+u in the denominator.
+    """
+    u = n_valid / np.maximum(n, 1)
+    age = np.maximum(t - seal_time, 0)
+    return (1.0 - u) * age / (1.0 + u)
+
+
+SELECTORS = {
+    "greedy": greedy_scores,
+    "cost_benefit": cost_benefit_scores,
+}
+
+
+class GCPolicy:
+    """GP-threshold triggering + pluggable segment selection.
+
+    ``gc_batch_segments`` mirrors Exp#2's "fixed 512 MiB of data per GC
+    operation": a GC operation collects ``gc_batch_segments`` victims.
+    """
+
+    def __init__(self, selector: str = "cost_benefit", gp_threshold: float = 0.15,
+                 gc_batch_segments: int = 1):
+        if selector not in SELECTORS:
+            raise ValueError(f"unknown selector {selector!r}")
+        self.selector = selector
+        self._score = SELECTORS[selector]
+        self.gp_threshold = gp_threshold
+        self.gc_batch_segments = gc_batch_segments
+
+    def should_trigger(self, vol: Volume) -> bool:
+        return vol.garbage_proportion > self.gp_threshold and len(vol.sealed) > 0
+
+    def select(self, vol: Volume, k: int | None = None) -> list[Segment]:
+        """Pick the ``k`` best victim segments among sealed segments."""
+        k = k or self.gc_batch_segments
+        sealed = vol.sealed
+        if not sealed:
+            return []
+        n = np.fromiter((s.n for s in sealed), dtype=np.float64, count=len(sealed))
+        nv = np.fromiter((s.n_valid for s in sealed), dtype=np.float64, count=len(sealed))
+        st = np.fromiter((s.seal_time for s in sealed), dtype=np.float64, count=len(sealed))
+        ct = np.fromiter((s.creation_time for s in sealed), dtype=np.float64, count=len(sealed))
+        scores = self._score(n, nv, st, ct, vol.t)
+        if k == 1:
+            idx = [int(np.argmax(scores))]
+        else:
+            k = min(k, len(sealed))
+            idx = list(np.argsort(-scores)[:k])
+        victims = [sealed[i] for i in idx]
+        # Refuse victims with zero garbage: rewriting them cannot reduce GP.
+        victims = [s for s in victims if s.garbage > 0 or s.n_valid == 0]
+        return victims

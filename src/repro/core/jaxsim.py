@@ -1,0 +1,331 @@
+"""TPU-resident log-structured placement simulator (`jax.lax.scan`).
+
+The numpy simulator (`simulator.py`) is the reference event loop; this module
+re-expresses the same volume state machine as dense arrays + `lax.scan` so an
+entire trace replay — placement decisions, GP-triggered GC, Greedy or
+Cost-Benefit victim selection, SepBIT's on-line ℓ estimation — compiles to a
+single XLA program. This is the paper's control plane made TPU-native: all
+per-write state transitions are static-shape scatters; GC's variable-length
+rewrite work is bounded by the segment size and expressed with masked
+scatters (`mode="drop"`).
+
+Supported schemes: sepbit / sepgc / nosep (the paper's core + the two
+structural baselines). Selectors: greedy / cost_benefit. Validated against
+the numpy simulator in tests/test_jaxsim.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BIG = jnp.int32(2 ** 30)
+
+
+@dataclasses.dataclass(frozen=True)
+class JaxSimConfig:
+    n_lbas: int
+    segment_size: int = 128
+    gp_threshold: float = 0.15
+    selector: str = "cost_benefit"          # or "greedy"
+    scheme: str = "sepbit"                  # sepbit | sepgc | nosep
+    nc_window: int = 16
+    max_gc_per_step: int = 64
+    n_segments: int | None = None           # S_max; default sized from capacity
+
+    @property
+    def n_classes(self) -> int:
+        return {"sepbit": 6, "sepgc": 2, "nosep": 1}[self.scheme]
+
+    @property
+    def s_max(self) -> int:
+        if self.n_segments is not None:
+            return self.n_segments
+        cap_segments = int(np.ceil(self.n_lbas / (1.0 - self.gp_threshold)
+                                   / self.segment_size))
+        return 2 * cap_segments + 4 * self.n_classes + 8
+
+
+def init_state(cfg: JaxSimConfig) -> dict:
+    S, s, C, n = cfg.s_max, cfg.segment_size, cfg.n_classes, cfg.n_lbas
+    state = {
+        "seg_lba": jnp.zeros((S, s), jnp.int32),
+        "seg_utime": jnp.zeros((S, s), jnp.int32),
+        "seg_valid": jnp.zeros((S, s), jnp.bool_),
+        "seg_n": jnp.zeros(S, jnp.int32),
+        "seg_nvalid": jnp.zeros(S, jnp.int32),
+        "seg_cls": jnp.zeros(S, jnp.int32),
+        "seg_state": jnp.zeros(S, jnp.int32),   # 0 free, 1 open, 2 sealed
+        "seg_ctime": jnp.zeros(S, jnp.int32),
+        "seg_stime": jnp.zeros(S, jnp.int32),
+        "open_sid": jnp.arange(C, dtype=jnp.int32),
+        "loc_seg": jnp.full(n, -1, jnp.int32),
+        "loc_off": jnp.zeros(n, jnp.int32),
+        "last_uw": jnp.full(n, -BIG, jnp.int32),
+        "t": jnp.int32(0),
+        "total_occ": jnp.int32(0),
+        "total_valid": jnp.int32(0),
+        "gc_writes": jnp.int32(0),
+        "reclaimed": jnp.int32(0),
+        "ell": jnp.float32(jnp.inf),
+        "ell_tot": jnp.float32(0),
+        "nc": jnp.int32(0),
+        "class_user": jnp.zeros(C, jnp.int32),
+        "class_gc": jnp.zeros(C, jnp.int32),
+    }
+    # the first C segments start open, one per class
+    state["seg_state"] = state["seg_state"].at[:C].set(1)
+    state["seg_cls"] = state["seg_cls"].at[:C].set(jnp.arange(C, dtype=jnp.int32))
+    return state
+
+
+# -- placement rules ---------------------------------------------------------
+
+def _user_class(cfg: JaxSimConfig, v, ell):
+    if cfg.scheme == "sepbit":
+        return jnp.where(v.astype(jnp.float32) < ell, 0, 1).astype(jnp.int32)
+    return jnp.int32(0)
+
+
+def _gc_classes(cfg: JaxSimConfig, victim_cls, g, ell):
+    """Class per rewritten block (Algorithm 1 GCWrite), vectorized over the
+    victim's slots. ``g`` = age = t - last user write time."""
+    if cfg.scheme == "sepbit":
+        gf = g.astype(jnp.float32)
+        by_age = jnp.where(gf < 4 * ell, 3, jnp.where(gf < 16 * ell, 4, 5))
+        return jnp.where(victim_cls == 0, 2, by_age).astype(jnp.int32)
+    if cfg.scheme == "sepgc":
+        return jnp.full(g.shape, 1, jnp.int32)
+    return jnp.zeros(g.shape, jnp.int32)
+
+
+def _scores(cfg: JaxSimConfig, st):
+    """Victim scores over all segments; -inf for non-sealed / zero-garbage."""
+    n = st["seg_n"].astype(jnp.float32)
+    nv = st["seg_nvalid"].astype(jnp.float32)
+    garbage = n - nv
+    if cfg.selector == "greedy":
+        score = garbage / jnp.maximum(n, 1.0)
+    else:
+        u = nv / jnp.maximum(n, 1.0)
+        age = jnp.maximum(st["t"] - st["seg_stime"], 0).astype(jnp.float32)
+        score = (1.0 - u) * age / (1.0 + u)
+    eligible = (st["seg_state"] == 2) & (garbage > 0)
+    return jnp.where(eligible, score, -jnp.inf)
+
+
+# -- GC: rewrite one victim segment ------------------------------------------
+
+def _alloc_free_ids(st, count):
+    """Indices of ``count`` free segments (static shape)."""
+    free = st["seg_state"] == 0
+    ids, = jnp.nonzero(free, size=count, fill_value=-1)
+    return ids.astype(jnp.int32)
+
+
+def _gc_once(cfg: JaxSimConfig, st):
+    S, s, C, n = cfg.s_max, cfg.segment_size, cfg.n_classes, cfg.n_lbas
+    victim = jnp.argmax(_scores(cfg, st)).astype(jnp.int32)
+
+    lba_v = st["seg_lba"][victim]
+    utime_v = st["seg_utime"][victim]
+    valid_v = st["seg_valid"][victim]
+    k_total = st["seg_nvalid"][victim]
+    victim_n = st["seg_n"][victim]
+    victim_cls = st["seg_cls"][victim]
+
+    # ℓ bookkeeping (Algorithm 1 lines 4-9): only Class-1 victims counted.
+    is_c1 = victim_cls == 0
+    nc = st["nc"] + jnp.where(is_c1, 1, 0)
+    ell_tot = st["ell_tot"] + jnp.where(
+        is_c1, (st["t"] - st["seg_ctime"][victim]).astype(jnp.float32), 0.0)
+    refresh = nc >= cfg.nc_window
+    ell = jnp.where(refresh, ell_tot / jnp.maximum(nc, 1), st["ell"])
+    nc = jnp.where(refresh, 0, nc)
+    ell_tot = jnp.where(refresh, 0.0, ell_tot)
+
+    g = st["t"] - utime_v
+    classes = jnp.where(valid_v, _gc_classes(cfg, victim_cls, g, ell), -1)
+
+    free_ids = _alloc_free_ids(st, C)
+
+    seg_lba, seg_utime, seg_valid = st["seg_lba"], st["seg_utime"], st["seg_valid"]
+    seg_n, seg_nvalid = st["seg_n"], st["seg_nvalid"]
+    seg_cls, seg_state = st["seg_cls"], st["seg_state"]
+    seg_ctime, seg_stime = st["seg_ctime"], st["seg_stime"]
+    open_sid, loc_seg, loc_off = st["open_sid"], st["loc_seg"], st["loc_off"]
+    class_gc = st["class_gc"]
+
+    for cls in range(C):  # static unroll; each class's blocks batch-appended
+        mask = classes == cls
+        ranks = jnp.cumsum(mask) - 1
+        k = jnp.where(mask.any(), jnp.max(jnp.where(mask, ranks, -1)) + 1, 0)
+        sid = open_sid[cls]
+        n0 = seg_n[sid]
+        room = s - n0
+        # first block appended to an empty open segment sets its creation time
+        seg_ctime = seg_ctime.at[sid].set(
+            jnp.where((n0 == 0) & (k > 0), st["t"], seg_ctime[sid]))
+        in_first = mask & (ranks < room)
+        in_second = mask & ~in_first
+        fresh = free_ids[cls]
+
+        # scatter first-part blocks into the current open segment
+        p1 = jnp.where(in_first, n0 + ranks, s)        # s => dropped
+        seg_lba = seg_lba.at[sid, p1].set(lba_v, mode="drop")
+        seg_utime = seg_utime.at[sid, p1].set(utime_v, mode="drop")
+        seg_valid = seg_valid.at[sid, p1].set(True, mode="drop")
+        dst1 = jnp.where(in_first, lba_v, n)           # n => dropped
+        loc_seg = loc_seg.at[dst1].set(sid, mode="drop")
+        loc_off = loc_off.at[dst1].set(n0 + ranks, mode="drop")
+
+        # overflow into a fresh (reserved) free segment
+        p2 = jnp.where(in_second, ranks - room, s)
+        seg_lba = seg_lba.at[fresh, p2].set(lba_v, mode="drop")
+        seg_utime = seg_utime.at[fresh, p2].set(utime_v, mode="drop")
+        seg_valid = seg_valid.at[fresh, p2].set(True, mode="drop")
+        dst2 = jnp.where(in_second, lba_v, n)
+        loc_seg = loc_seg.at[dst2].set(fresh, mode="drop")
+        loc_off = loc_off.at[dst2].set(ranks - room, mode="drop")
+
+        took1 = jnp.minimum(k, room)
+        took2 = k - took1
+        seg_n = seg_n.at[sid].add(took1)
+        seg_nvalid = seg_nvalid.at[sid].add(took1)
+        seg_n = seg_n.at[fresh].add(took2)
+        seg_nvalid = seg_nvalid.at[fresh].add(took2)
+        class_gc = class_gc.at[cls].add(k)
+
+        # seal-if-full + promote the fresh segment to open
+        sealed_now = seg_n[sid] >= s
+        seg_state = seg_state.at[sid].set(jnp.where(sealed_now, 2, seg_state[sid]))
+        seg_stime = seg_stime.at[sid].set(jnp.where(sealed_now, st["t"], seg_stime[sid]))
+        promote = sealed_now
+        seg_state = seg_state.at[fresh].set(jnp.where(promote, 1, seg_state[fresh]))
+        seg_cls = seg_cls.at[fresh].set(jnp.where(promote, cls, seg_cls[fresh]))
+        seg_ctime = seg_ctime.at[fresh].set(jnp.where(promote, st["t"], seg_ctime[fresh]))
+        open_sid = open_sid.at[cls].set(jnp.where(promote, fresh, sid))
+
+    # release the victim
+    seg_state = seg_state.at[victim].set(0)
+    seg_valid = seg_valid.at[victim].set(False)
+    seg_n = seg_n.at[victim].set(0)
+    seg_nvalid = seg_nvalid.at[victim].set(0)
+
+    st = dict(
+        st,
+        seg_lba=seg_lba, seg_utime=seg_utime, seg_valid=seg_valid,
+        seg_n=seg_n, seg_nvalid=seg_nvalid, seg_cls=seg_cls,
+        seg_state=seg_state, seg_ctime=seg_ctime, seg_stime=seg_stime,
+        open_sid=open_sid, loc_seg=loc_seg, loc_off=loc_off,
+        total_occ=st["total_occ"] - victim_n + k_total,
+        total_valid=st["total_valid"] - k_total + k_total,  # net zero: moves
+        gc_writes=st["gc_writes"] + k_total,
+        reclaimed=st["reclaimed"] + 1,
+        ell=ell, ell_tot=ell_tot, nc=nc, class_gc=class_gc,
+    )
+    return st
+
+
+def _gp(st):
+    occ = jnp.maximum(st["total_occ"], 1).astype(jnp.float32)
+    return 1.0 - st["total_valid"].astype(jnp.float32) / occ
+
+
+def _maybe_gc(cfg: JaxSimConfig, st):
+    def cond(carry):
+        st, i = carry
+        any_victim = jnp.isfinite(jnp.max(_scores(cfg, st)))
+        return (_gp(st) > cfg.gp_threshold) & any_victim & (i < cfg.max_gc_per_step)
+
+    def body(carry):
+        st, i = carry
+        return _gc_once(cfg, st), i + 1
+
+    st, _ = jax.lax.while_loop(cond, body, (st, jnp.int32(0)))
+    return st
+
+
+# -- per-user-write step -------------------------------------------------------
+
+def _user_step(cfg: JaxSimConfig, st, lba):
+    S, s, C, n = cfg.s_max, cfg.segment_size, cfg.n_classes, cfg.n_lbas
+    t = st["t"]
+
+    # invalidate predecessor (no-op for a fresh LBA: loc_seg = -1 drops)
+    old_sid = st["loc_seg"][lba]
+    old_off = st["loc_off"][lba]
+    had_old = old_sid >= 0
+    drop_sid = jnp.where(had_old, old_sid, S)
+    seg_valid = st["seg_valid"].at[drop_sid, old_off].set(False, mode="drop")
+    seg_nvalid = st["seg_nvalid"].at[drop_sid].add(-1, mode="drop")
+    v = t - st["last_uw"][lba]  # huge for fresh LBAs => "infinite lifespan"
+
+    cls = _user_class(cfg, v, st["ell"])
+    sid = st["open_sid"][cls]
+    off = st["seg_n"][sid]
+    seg_lba = st["seg_lba"].at[sid, off].set(lba)
+    seg_utime = st["seg_utime"].at[sid, off].set(t)
+    seg_valid = seg_valid.at[sid, off].set(True)
+    seg_n = st["seg_n"].at[sid].add(1)
+    seg_nvalid = seg_nvalid.at[sid].add(1)
+    loc_seg = st["loc_seg"].at[lba].set(sid)
+    loc_off = st["loc_off"].at[lba].set(off)
+    last_uw = st["last_uw"].at[lba].set(t)
+
+    # seal-if-full, promote a free segment to open
+    fresh = _alloc_free_ids(dict(st, seg_state=st["seg_state"]), 1)[0]
+    sealed_now = seg_n[sid] >= s
+    seg_state = st["seg_state"].at[sid].set(jnp.where(sealed_now, 2, st["seg_state"][sid]))
+    seg_stime = st["seg_stime"].at[sid].set(jnp.where(sealed_now, t, st["seg_stime"][sid]))
+    seg_state = seg_state.at[fresh].set(jnp.where(sealed_now, 1, seg_state[fresh]))
+    seg_cls_arr = st["seg_cls"].at[fresh].set(jnp.where(sealed_now, cls, st["seg_cls"][fresh]))
+    seg_ctime = st["seg_ctime"].at[fresh].set(jnp.where(sealed_now, t, st["seg_ctime"][fresh]))
+    open_sid = st["open_sid"].at[cls].set(jnp.where(sealed_now, fresh, sid))
+
+    st = dict(
+        st,
+        seg_lba=seg_lba, seg_utime=seg_utime, seg_valid=seg_valid,
+        seg_n=seg_n, seg_nvalid=seg_nvalid, seg_cls=seg_cls_arr,
+        seg_state=seg_state, seg_ctime=seg_ctime, seg_stime=seg_stime,
+        open_sid=open_sid, loc_seg=loc_seg, loc_off=loc_off, last_uw=last_uw,
+        t=t + 1,
+        total_occ=st["total_occ"] + 1,
+        total_valid=st["total_valid"] - had_old.astype(jnp.int32) + 1,
+        class_user=st["class_user"].at[cls].add(1),
+    )
+    return _maybe_gc(cfg, st)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _run(cfg: JaxSimConfig, trace: jnp.ndarray) -> dict:
+    st = init_state(cfg)
+
+    def step(st, lba):
+        return _user_step(cfg, st, lba), None
+
+    st, _ = jax.lax.scan(step, st, trace)
+    return st
+
+
+def simulate_jax(trace: np.ndarray, cfg: JaxSimConfig) -> dict:
+    """Replay ``trace`` on the XLA state machine; returns summary stats."""
+    trace = jnp.asarray(np.asarray(trace, dtype=np.int32))
+    st = jax.block_until_ready(_run(cfg, trace))
+    user = int(len(trace))
+    gc_writes = int(st["gc_writes"])
+    return {
+        "scheme": cfg.scheme,
+        "selector": cfg.selector,
+        "user_writes": user,
+        "gc_writes": gc_writes,
+        "wa": (user + gc_writes) / user,
+        "reclaimed": int(st["reclaimed"]),
+        "ell": float(st["ell"]),
+        "class_user_writes": np.asarray(st["class_user"]).tolist(),
+        "class_gc_writes": np.asarray(st["class_gc"]).tolist(),
+    }

@@ -1,0 +1,23 @@
+"""Placement-scheme registry."""
+
+from .base import Placement
+from .baselines import FK, NoSep, SepGC
+from .sepbit import SepBIT, SepBIT_GW, SepBIT_UW
+from .temperature import DAC, ETI, FADaC, MQ, SFR, SFS, WARCIP, MultiLog
+
+SCHEMES = {
+    cls.name: cls
+    for cls in (
+        NoSep, SepGC, FK, SepBIT, SepBIT_UW, SepBIT_GW,
+        DAC, SFS, MultiLog, ETI, MQ, SFR, FADaC, WARCIP,
+    )
+}
+
+
+def make_placement(name: str, n_lbas: int, segment_size: int, **kw) -> Placement:
+    if name not in SCHEMES:
+        raise ValueError(f"unknown placement scheme {name!r}; have {sorted(SCHEMES)}")
+    return SCHEMES[name](n_lbas, segment_size, **kw)
+
+
+__all__ = ["Placement", "SCHEMES", "make_placement"]

@@ -1,0 +1,46 @@
+"""Placement-scheme interface (paper Figure 1).
+
+A placement scheme sees every written block — user writes and GC rewrites —
+and returns the *class* (open-segment group) the block is appended to. It is
+independent of the GC policy (triggering/selection/rewriting), matching the
+paper's compatibility claim.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..blockstore import INF, Segment, Volume
+
+
+class Placement:
+    """Base class. Subclasses set ``n_classes`` and override the hooks."""
+
+    name = "base"
+    n_classes = 6
+
+    def __init__(self, n_lbas: int, segment_size: int):
+        self.n_lbas = n_lbas
+        self.segment_size = segment_size
+
+    # -- hooks ---------------------------------------------------------------
+    def on_user_write(self, vol: Volume, lba: int, v: int) -> int:
+        """Class for a user-written block. ``v`` = lifespan of the block it
+        invalidated (INF for a new write)."""
+        raise NotImplementedError
+
+    def gc_write_classes(self, vol: Volume, seg: Segment, lbas: np.ndarray,
+                         utimes: np.ndarray, from_gc: np.ndarray) -> np.ndarray:
+        """Classes for the valid blocks rewritten out of victim ``seg``
+        (vectorized — GC rewrites a whole segment at once)."""
+        raise NotImplementedError
+
+    def on_gc_segment(self, vol: Volume, seg: Segment) -> None:
+        """Bookkeeping when ``seg`` is reclaimed (before rewrites)."""
+
+    # -- trace annotation ----------------------------------------------------
+    requires_future = False  # FK sets this; simulator then annotates BITs
+
+    def set_future(self, next_write_time: np.ndarray) -> None:
+        """FK only: per-request timestamp of the next write to the same LBA."""
+        raise NotImplementedError

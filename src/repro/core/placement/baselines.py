@@ -1,0 +1,75 @@
+"""NoSep / SepGC / FK baselines (paper §4.1)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..blockstore import INF, Segment, Volume
+from .base import Placement
+
+
+class NoSep(Placement):
+    """Everything — user writes and GC rewrites — in one open segment."""
+
+    name = "nosep"
+    n_classes = 1
+
+    def on_user_write(self, vol, lba, v):
+        return 0
+
+    def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
+        return np.zeros(len(lbas), dtype=np.int64)
+
+
+class SepGC(Placement):
+    """Separate user writes from GC rewrites [31]; two open segments."""
+
+    name = "sepgc"
+    n_classes = 2
+
+    def on_user_write(self, vol, lba, v):
+        return 0
+
+    def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
+        return np.ones(len(lbas), dtype=np.int64)
+
+
+class FK(Placement):
+    """Future knowledge (paper §4.1): the BIT of every block is known.
+
+    A block invalidated within ``t`` blocks of now goes to the ceil(t/s)-th
+    open segment (s = segment size); blocks whose BIT falls beyond the last
+    open segment all share the last one. The simulator annotates the trace
+    with per-request next-write times (the block's BIT); during GC the
+    remaining lifespan is recomputed from the same annotation via the LBA's
+    pending BIT table.
+    """
+
+    name = "fk"
+    n_classes = 6
+    requires_future = True
+
+    def __init__(self, n_lbas: int, segment_size: int):
+        super().__init__(n_lbas, segment_size)
+        # bit_of[lba] = absolute user-write timestamp at which the *current*
+        # version of lba dies (INF if never rewritten in the trace).
+        self.bit_of = np.full(n_lbas, INF, dtype=np.int64)
+
+    def note_user_write(self, lba: int, bit: int) -> None:
+        self.bit_of[lba] = bit
+
+    def _class_for_remaining(self, remaining: np.ndarray | int) -> np.ndarray | int:
+        cls = np.ceil(np.asarray(remaining, dtype=np.float64) / self.segment_size) - 1
+        return np.clip(cls, 0, self.n_classes - 1).astype(np.int64)
+
+    def on_user_write(self, vol, lba, v):
+        remaining = self.bit_of[lba] - vol.t
+        if remaining >= INF // 2:
+            return self.n_classes - 1
+        return int(self._class_for_remaining(max(int(remaining), 1)))
+
+    def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
+        remaining = self.bit_of[lbas] - vol.t
+        out = self._class_for_remaining(np.maximum(remaining, 1))
+        out[remaining >= INF // 2] = self.n_classes - 1
+        return out

@@ -1,0 +1,131 @@
+"""SepBIT (paper §3, Algorithm 1) and its Exp#4 ablations UW / GW.
+
+Class map (6 classes):
+  1 (idx 0): short-lived user writes   (v < ell)
+  2 (idx 1): long-lived user writes    (v >= ell, incl. new writes: v = INF)
+  3 (idx 2): GC rewrites out of Class 1
+  4 (idx 3): GC rewrites, age in [0, 4*ell)
+  5 (idx 4): GC rewrites, age in [4*ell, 16*ell)
+  6 (idx 5): GC rewrites, age in [16*ell, +inf)
+
+``ell`` is the mean segment lifespan (t - creation_time) over the last
+``nc_window`` reclaimed Class-1 segments (Algorithm 1 lines 4-9), initialized
+to +inf so everything starts in Class 1 until the first estimate lands.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..blockstore import INF, Segment, Volume
+from .base import Placement
+
+C1, C2, C3, C4, C5, C6 = range(6)
+
+
+class SepBIT(Placement):
+    name = "sepbit"
+    n_classes = 6
+
+    def __init__(self, n_lbas: int, segment_size: int, nc_window: int = 16,
+                 separate_user: bool = True, separate_gc: bool = True):
+        super().__init__(n_lbas, segment_size)
+        self.nc_window = nc_window
+        self.separate_user = separate_user
+        self.separate_gc = separate_gc
+        self.ell = float(INF)
+        self._ell_tot = 0.0
+        self._nc = 0
+        # Exp#5 instrumentation: FIFO-queue occupancy (unique LBAs whose last
+        # user write is within the recent `ell` user writes), sampled whenever
+        # `ell` is re-estimated.
+        self.fifo_occupancy_samples: list[int] = []
+
+    # -- Algorithm 1: GarbageCollect lines 4-9 -------------------------------
+    def on_gc_segment(self, vol: Volume, seg: Segment) -> None:
+        if seg.cls == C1 or not self.separate_user:
+            # Ablation GW uses a single user class; its lifespan monitor
+            # watches that class (the paper's Class-1 monitor generalizes to
+            # "the class holding fresh user writes").
+            if seg.cls == C1:
+                self._nc += 1
+                self._ell_tot += vol.t - seg.creation_time
+                if self._nc >= self.nc_window:
+                    self.ell = self._ell_tot / self._nc
+                    self._nc = 0
+                    self._ell_tot = 0.0
+                    self._sample_fifo_occupancy(vol)
+
+    def _sample_fifo_occupancy(self, vol: Volume) -> None:
+        if self.ell >= INF:
+            return
+        w = int(min(self.ell, vol.t))
+        recent = vol.last_user_write >= (vol.t - w)
+        self.fifo_occupancy_samples.append(int(np.count_nonzero(recent)))
+
+    # -- Algorithm 1: UserWrite lines 14-22 ----------------------------------
+    def on_user_write(self, vol: Volume, lba: int, v: int) -> int:
+        if not self.separate_user:
+            return C1
+        return C1 if v < self.ell else C2
+
+    # -- Algorithm 1: GCWrite lines 23-32 (vectorized over the victim) -------
+    def gc_write_classes(self, vol: Volume, seg: Segment, lbas: np.ndarray,
+                         utimes: np.ndarray, from_gc: np.ndarray) -> np.ndarray:
+        k = len(lbas)
+        if not self.separate_gc:
+            # Ablation UW: single GC class.
+            return np.full(k, C3, dtype=np.int64)
+        out = np.empty(k, dtype=np.int64)
+        if seg.cls == C1:
+            out[:] = C3
+            return out
+        g = vol.t - utimes  # age since last *user* write (survives rewrites)
+        ell = self.ell
+        out[:] = C6
+        out[g < 16 * ell] = C5
+        out[g < 4 * ell] = C4
+        return out
+
+
+class SepBIT_UW(SepBIT):
+    """Exp#4 'UW': separate user writes (Classes 1/2), single GC class."""
+
+    name = "uw"
+    n_classes = 3
+
+    def __init__(self, n_lbas: int, segment_size: int, **kw):
+        super().__init__(n_lbas, segment_size, separate_user=True,
+                         separate_gc=False, **kw)
+
+
+class SepBIT_GW(SepBIT):
+    """Exp#4 'GW': single user class, separate GC classes by age."""
+
+    name = "gw"
+    n_classes = 4
+
+    def __init__(self, n_lbas: int, segment_size: int, **kw):
+        super().__init__(n_lbas, segment_size, separate_user=False,
+                         separate_gc=True, **kw)
+
+    def on_gc_segment(self, vol: Volume, seg: Segment) -> None:
+        # All user writes land in class 0; monitor it for ell.
+        if seg.cls == C1:
+            self._nc += 1
+            self._ell_tot += vol.t - seg.creation_time
+            if self._nc >= self.nc_window:
+                self.ell = self._ell_tot / self._nc
+                self._nc = 0
+                self._ell_tot = 0.0
+
+    def gc_write_classes(self, vol: Volume, seg: Segment, lbas: np.ndarray,
+                         utimes: np.ndarray, from_gc: np.ndarray) -> np.ndarray:
+        k = len(lbas)
+        out = np.empty(k, dtype=np.int64)
+        g = vol.t - utimes
+        ell = self.ell
+        out[:] = 3  # [16*ell, inf)
+        out[g < 16 * ell] = 2
+        out[g < 4 * ell] = 1
+        return out

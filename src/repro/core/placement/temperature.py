@@ -1,0 +1,275 @@
+"""The eight temperature-based schemes SepBIT is compared against (§4.1).
+
+Each scheme follows its original paper's mechanism (per-LBA or per-extent
+temperature counters, promotion on user writes / demotion on GC writes), with
+the class budgets from §4.1: DAC/SFS/ML/FADaC use all 6 classes for all
+blocks; ETI uses 2 user + 1 GC; MQ/SFR/WARCIP use 5 user + 1 GC. Knobs follow
+the original papers' defaults where those transfer to a unit-free simulator;
+deviations are noted per class.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from ..blockstore import INF, Segment, Volume
+from .base import Placement
+
+
+class DAC(Placement):
+    """Dynamic dAta Clustering [7]: region ladder. A user write promotes the
+    LBA one region hotter; a GC rewrite demotes it one region colder."""
+
+    name = "dac"
+    n_classes = 6
+
+    def __init__(self, n_lbas, segment_size):
+        super().__init__(n_lbas, segment_size)
+        self.region = np.zeros(n_lbas, dtype=np.int64)  # 0 = coldest
+
+    def on_user_write(self, vol, lba, v):
+        r = min(self.region[lba] + 1, self.n_classes - 1)
+        self.region[lba] = r
+        return self.n_classes - 1 - int(r)  # hotter -> lower class index
+
+    def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
+        r = np.maximum(self.region[lbas] - 1, 0)
+        self.region[lbas] = r
+        return self.n_classes - 1 - r
+
+
+class MultiLog(Placement):
+    """ML [22]: multiple logs keyed by update count on a log2 ladder; GC
+    rewrites demote one level (cold data drifts to the last log)."""
+
+    name = "ml"
+    n_classes = 6
+
+    def __init__(self, n_lbas, segment_size):
+        super().__init__(n_lbas, segment_size)
+        self.count = np.zeros(n_lbas, dtype=np.int64)
+        self.level = np.zeros(n_lbas, dtype=np.int64)
+
+    def on_user_write(self, vol, lba, v):
+        self.count[lba] += 1
+        lvl = min(int(self.count[lba]).bit_length() - 1, self.n_classes - 1)
+        self.level[lba] = lvl
+        return self.n_classes - 1 - lvl
+
+    def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
+        lvl = np.maximum(self.level[lbas] - 1, 0)
+        self.level[lbas] = lvl
+        return self.n_classes - 1 - lvl
+
+
+class SFS(Placement):
+    """SFS [22]: hotness = write frequency / age; blocks are grouped by
+    hotness quantiles (recomputed from a sampled reservoir, as SFS recomputes
+    group boundaries per segment write)."""
+
+    name = "sfs"
+    n_classes = 6
+
+    def __init__(self, n_lbas, segment_size, resample_every: int = 4096):
+        super().__init__(n_lbas, segment_size)
+        self.count = np.zeros(n_lbas, dtype=np.int64)
+        self.first = np.full(n_lbas, -1, dtype=np.int64)
+        self.resample_every = resample_every
+        self._since = 0
+        self._bounds = None  # hotness quantile boundaries (n_classes-1,)
+
+    def _hotness(self, lbas, t):
+        age = np.maximum(t - self.first[lbas], 1)
+        return self.count[lbas] / age
+
+    def _refresh_bounds(self, vol):
+        seen = np.flatnonzero(self.first >= 0)
+        if len(seen) < self.n_classes:
+            return
+        if len(seen) > 65536:
+            seen = np.random.default_rng(0).choice(seen, 65536, replace=False)
+        h = self._hotness(seen, vol.t)
+        qs = np.linspace(0, 1, self.n_classes + 1)[1:-1]
+        self._bounds = np.quantile(h, qs)
+
+    def _classify(self, lbas, t):
+        if self._bounds is None:
+            return np.zeros(len(lbas), dtype=np.int64)
+        h = self._hotness(lbas, t)
+        # hotter -> lower class index (hot log first)
+        return (self.n_classes - 1 - np.searchsorted(self._bounds, h)).astype(np.int64)
+
+    def on_user_write(self, vol, lba, v):
+        if self.first[lba] < 0:
+            self.first[lba] = vol.t
+        self.count[lba] += 1
+        self._since += 1
+        if self._since >= self.resample_every:
+            self._since = 0
+            self._refresh_bounds(vol)
+        return int(self._classify(np.array([lba]), vol.t)[0])
+
+    def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
+        return self._classify(lbas, vol.t)
+
+
+class ETI(Placement):
+    """Extent-based temperature identification [27]: per-extent write counters
+    with periodic decay; hot/cold split of user writes + one GC class."""
+
+    name = "eti"
+    n_classes = 3
+    extent_blocks = 256
+    decay_every = 1 << 15
+
+    def __init__(self, n_lbas, segment_size):
+        super().__init__(n_lbas, segment_size)
+        n_ext = (n_lbas + self.extent_blocks - 1) // self.extent_blocks
+        self.temp = np.zeros(n_ext, dtype=np.float64)
+        self._since = 0
+
+    def _tick(self):
+        self._since += 1
+        if self._since >= self.decay_every:
+            self._since = 0
+            self.temp *= 0.5
+
+    def on_user_write(self, vol, lba, v):
+        e = lba // self.extent_blocks
+        self.temp[e] += 1
+        self._tick()
+        hot = self.temp[e] > max(np.mean(self.temp), 1.0)
+        return 0 if hot else 1
+
+    def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
+        return np.full(len(lbas), 2, dtype=np.int64)
+
+
+class MQ(Placement):
+    """MultiQueue [35]: queue level by log2(access count) with expiry-based
+    demotion. 5 user classes + 1 GC class."""
+
+    name = "mq"
+    n_classes = 6
+    user_classes = 5
+
+    def __init__(self, n_lbas, segment_size, life_time: int | None = None):
+        super().__init__(n_lbas, segment_size)
+        self.freq = np.zeros(n_lbas, dtype=np.int64)
+        self.level = np.zeros(n_lbas, dtype=np.int64)
+        self.expire = np.zeros(n_lbas, dtype=np.int64)
+        self.life_time = life_time or 4 * segment_size
+
+    def on_user_write(self, vol, lba, v):
+        if vol.t > self.expire[lba] and self.level[lba] > 0:
+            self.level[lba] -= 1  # expiry demotion
+        self.freq[lba] += 1
+        lvl = min(int(self.freq[lba]).bit_length() - 1, self.user_classes - 1)
+        self.level[lba] = max(lvl, self.level[lba])
+        self.expire[lba] = vol.t + self.life_time
+        return self.user_classes - 1 - int(self.level[lba])
+
+    def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
+        return np.full(len(lbas), self.n_classes - 1, dtype=np.int64)
+
+
+class SFR(Placement):
+    """AutoStream SFR [35]: score from Sequentiality, Frequency, Recency per
+    chunk; scores are bucketed into 5 user classes + 1 GC class."""
+
+    name = "sfr"
+    n_classes = 6
+    user_classes = 5
+    chunk_blocks = 64
+
+    def __init__(self, n_lbas, segment_size):
+        super().__init__(n_lbas, segment_size)
+        n_ch = (n_lbas + self.chunk_blocks - 1) // self.chunk_blocks
+        self.freq = np.zeros(n_ch, dtype=np.float64)
+        self.last = np.full(n_ch, -INF, dtype=np.int64)
+        self.prev_lba = -2
+
+    def on_user_write(self, vol, lba, v):
+        c = lba // self.chunk_blocks
+        seq = 1.0 if lba == self.prev_lba + 1 else 0.0
+        self.prev_lba = lba
+        rec = 1.0 / (1.0 + math.log1p(max(vol.t - self.last[c], 0)))
+        self.freq[c] = 0.9 * self.freq[c] + 1.0
+        self.last[c] = vol.t
+        score = 0.4 * min(self.freq[c] / 16.0, 1.0) + 0.4 * rec + 0.2 * (1.0 - seq)
+        cls = int(min(score * self.user_classes, self.user_classes - 1))
+        return self.user_classes - 1 - cls
+
+    def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
+        return np.full(len(lbas), self.n_classes - 1, dtype=np.int64)
+
+
+class FADaC(Placement):
+    """FADaC [16]: fading (exponentially decayed) per-chunk write counters;
+    class by decayed-temperature ladder. Uses all 6 classes."""
+
+    name = "fadac"
+    n_classes = 6
+    chunk_blocks = 64
+    half_life = 1 << 16
+
+    def __init__(self, n_lbas, segment_size):
+        super().__init__(n_lbas, segment_size)
+        n_ch = (n_lbas + self.chunk_blocks - 1) // self.chunk_blocks
+        self.temp = np.zeros(n_ch, dtype=np.float64)
+        self.last = np.zeros(n_ch, dtype=np.int64)
+        self._lam = math.log(2.0) / self.half_life
+
+    def _decayed(self, c, t):
+        return self.temp[c] * math.exp(-self._lam * max(t - self.last[c], 0))
+
+    def _cls(self, temp_now):
+        lvl = min(int(math.log2(1.0 + temp_now)), self.n_classes - 1)
+        return self.n_classes - 1 - lvl
+
+    def on_user_write(self, vol, lba, v):
+        c = lba // self.chunk_blocks
+        self.temp[c] = self._decayed(c, vol.t) + 1.0
+        self.last[c] = vol.t
+        return self._cls(self.temp[c])
+
+    def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
+        cs = lbas // self.chunk_blocks
+        dt = np.maximum(vol.t - self.last[cs], 0)
+        temps = self.temp[cs] * np.exp(-self._lam * dt)
+        lvl = np.minimum(np.log2(1.0 + temps).astype(np.int64), self.n_classes - 1)
+        return self.n_classes - 1 - lvl
+
+
+class WARCIP(Placement):
+    """WARCIP [36]: online k-means clustering of per-LBA rewrite intervals
+    (log-scale); each cluster gets its own open segment. 5 user clusters +
+    1 GC class."""
+
+    name = "warcip"
+    n_classes = 6
+    user_classes = 5
+
+    def __init__(self, n_lbas, segment_size):
+        super().__init__(n_lbas, segment_size)
+        self.last = np.full(n_lbas, -1, dtype=np.int64)
+        # log-interval centroids, spread over a plausible dynamic range
+        self.centroids = np.linspace(2.0, 18.0, self.user_classes)
+        self.counts = np.ones(self.user_classes)
+
+    def on_user_write(self, vol, lba, v):
+        if self.last[lba] < 0:
+            cls = self.user_classes - 1  # unknown interval -> coldest
+        else:
+            li = math.log2(max(vol.t - self.last[lba], 1) + 1)
+            j = int(np.argmin(np.abs(self.centroids - li)))
+            self.counts[j] += 1
+            self.centroids[j] += (li - self.centroids[j]) / min(self.counts[j], 1024)
+            cls = j
+        self.last[lba] = vol.t
+        return cls
+
+    def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
+        return np.full(len(lbas), self.n_classes - 1, dtype=np.int64)

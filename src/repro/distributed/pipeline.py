@@ -1,0 +1,79 @@
+"""Optional pipeline parallelism (GPipe schedule, shard_map + collective_permute).
+
+The assigned production meshes are (data, model)-only, so PP is off by
+default; this module exists for deployments that trade the model axis for a
+stage axis (e.g. very deep models on low-bandwidth inter-slice links). The
+schedule is the standard M-microbatch GPipe loop: bubble fraction
+(S-1)/(M+S-1); activations hop stages via collective_permute.
+
+``pipeline_apply`` is validated against the sequential stack in
+tests/test_distributed.py on a 4-device host mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(mesh: Mesh, block_fn, stacked_params, x_microbatches,
+                   *, stage_axis: str = "stage"):
+    """Run a stack of identical blocks as a pipeline.
+
+    stacked_params: pytree with leading axis L = S*per_stage (sharded over
+    ``stage_axis``); block_fn(params_i, h) -> h.
+    x_microbatches: (M, mb, ...) microbatched input (replicated).
+    Returns (M, mb, ...) outputs, numerically identical to applying all L
+    blocks sequentially.
+    """
+    S = mesh.shape[stage_axis]
+    M = x_microbatches.shape[0]
+    L = jax.tree.leaves(stacked_params)[0].shape[0]
+    assert L % S == 0, (L, S)
+    per_stage = L // S
+    fwd = [(i, (i + 1) % S) for i in range(S - 1)]  # stage i -> i+1
+
+    def stage_fn(params_local, x_mb):
+        # params_local: (per_stage, ...) this stage's slice; x_mb: (M, mb, ...)
+        stage = jax.lax.axis_index(stage_axis)
+
+        def apply_stage(h):
+            def body(h, p):
+                return block_fn(p, h), None
+            h, _ = jax.lax.scan(body, h, params_local)
+            return h
+
+        mb_shape = x_mb.shape[1:]
+        h = jnp.zeros(mb_shape, x_mb.dtype)
+        outputs = jnp.zeros_like(x_mb)
+        for t in range(M + S - 1):
+            # stage 0 ingests microbatch t (if any)
+            feed = x_mb[jnp.minimum(t, M - 1)]
+            h_in = jnp.where(stage == 0, feed, h)
+            h_out = apply_stage(h_in)
+            # last stage emits microbatch t-(S-1)
+            out_idx = t - (S - 1)
+            emit = (stage == S - 1) & (out_idx >= 0)
+            outputs = jax.lax.cond(
+                emit,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, h_out, jnp.maximum(out_idx, 0), 0),
+                lambda o: o,
+                outputs)
+            # hop activations to the next stage
+            h = jax.lax.ppermute(h_out, stage_axis, fwd)
+        # only the last stage's buffer is meaningful; share it
+        outputs = jax.lax.psum(
+            jnp.where(stage == S - 1, outputs, jnp.zeros_like(outputs)),
+            stage_axis)
+        return outputs
+
+    pspec = jax.tree.map(lambda _: P(stage_axis), stacked_params)
+    fn = shard_map(stage_fn, mesh=mesh,
+                   in_specs=(pspec, P()), out_specs=P(),
+                   check_rep=False)
+    return fn(stacked_params, x_microbatches)

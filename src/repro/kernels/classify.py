@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: SepBIT class assignment (Algorithm 1, vectorized).
+
+Fuses the paper's UserWrite / GCWrite placement decisions over a *batch* of
+written blocks — the form the decision takes in the serving integration,
+where a KV-compaction tick classifies thousands of pages at once:
+
+  user write:            class = 0 if v < ell else 1
+  GC write, from C1:     class = 2
+  GC write, otherwise:   class = 3 + (g >= 4*ell) + (g >= 16*ell)
+
+Inputs: v (predecessor lifespan), g (age), from_c1 / is_gc flags, and the
+scalar ell; elementwise over (8,128)-tiled int32 blocks on the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+TILE_ROWS = 8
+
+
+def _classify_kernel(ell_ref, v_ref, g_ref, from_c1_ref, is_gc_ref, out_ref):
+    ell = ell_ref[0, 0]
+    v = v_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    from_c1 = from_c1_ref[...] != 0
+    is_gc = is_gc_ref[...] != 0
+
+    user_cls = jnp.where(v < ell, 0, 1)
+    age_cls = 3 + (g >= 4.0 * ell).astype(jnp.int32) + (g >= 16.0 * ell).astype(jnp.int32)
+    gc_cls = jnp.where(from_c1, 2, age_cls)
+    out_ref[...] = jnp.where(is_gc, gc_cls, user_cls).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def classify(v: jax.Array, g: jax.Array, from_c1: jax.Array, is_gc: jax.Array,
+             ell: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """SepBIT class ids for a batch of writes. 1-D equal-length inputs."""
+    (B,) = v.shape
+    tile = TILE_ROWS * LANE
+    Bp = ((B + tile - 1) // tile) * tile
+    pad = Bp - B
+
+    def prep(x):
+        return jnp.pad(x.astype(jnp.int32), (0, pad)).reshape(Bp // LANE, LANE)
+
+    v2, g2, c12, gc2 = map(prep, (v, g, from_c1, is_gc))
+    spec = pl.BlockSpec((TILE_ROWS, LANE), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _classify_kernel,
+        grid=(Bp // tile,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), spec, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((Bp // LANE, LANE), jnp.int32),
+        interpret=interpret,
+    )(ell.reshape(1, 1).astype(jnp.float32), v2, g2, c12, gc2)
+    return out.reshape(-1)[:B]

@@ -1,0 +1,21 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; interpret mode
+executes the kernel bodies in Python for correctness validation). On TPU,
+call with interpret=False — the BlockSpecs are written for v5e VMEM tiling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .classify import classify
+from .decode_attn import flash_decode
+from .segsel import segment_select
+from .zipfprob import pr_gc_bit_kernel, pr_user_bit_kernel, zipf_bit_sums
+
+__all__ = [
+    "segment_select", "classify", "zipf_bit_sums",
+    "pr_user_bit_kernel", "pr_gc_bit_kernel", "flash_decode",
+]

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-validated in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_select_ref(seg_n, seg_nvalid, seg_stime, seg_state, t, *,
+                       selector: str = "cost_benefit"):
+    nf = seg_n.astype(jnp.float32)
+    nvf = seg_nvalid.astype(jnp.float32)
+    garbage = nf - nvf
+    if selector == "greedy":
+        score = garbage / jnp.maximum(nf, 1.0)
+    else:
+        u = nvf / jnp.maximum(nf, 1.0)
+        age = jnp.maximum(t - seg_stime, 0).astype(jnp.float32)
+        score = (1.0 - u) * age / (1.0 + u)
+    score = jnp.where((seg_state == 2) & (garbage > 0), score, -jnp.inf)
+    best = jnp.max(score)
+    idx = jnp.argmax(score).astype(jnp.int32)
+    return jnp.where(jnp.isfinite(best), idx, -1), best
+
+
+def classify_ref(v, g, from_c1, is_gc, ell):
+    v = v.astype(jnp.float32)
+    g = g.astype(jnp.float32)
+    user_cls = jnp.where(v < ell, 0, 1)
+    age_cls = 3 + (g >= 4.0 * ell).astype(jnp.int32) + (g >= 16.0 * ell).astype(jnp.int32)
+    gc_cls = jnp.where(from_c1 != 0, 2, age_cls)
+    return jnp.where(is_gc != 0, gc_cls, user_cls).astype(jnp.int32)
+
+
+def zipf_bit_sums_ref(probs, u0, v0, g0, r0):
+    p = probs.astype(jnp.float32)
+    lg = jnp.log1p(-p)
+    pow_u0 = jnp.exp(u0 * lg)
+    pow_v0 = jnp.exp(v0 * lg)
+    pow_g0 = jnp.exp(g0 * lg)
+    pow_gr = jnp.exp((g0 + r0) * lg)
+    return jnp.stack([
+        jnp.sum(p * (1 - pow_u0) * (1 - pow_v0)),
+        jnp.sum(p * (1 - pow_v0)),
+        jnp.sum(p * pow_g0),
+        jnp.sum(p * (pow_g0 - pow_gr)),
+    ])
+
+
+def flash_decode_ref(q, k, v, kv_len):
+    """(B, Hq, D) x (B, S, Hkv, D) -> (B, Hq, D), GQA, length-masked."""
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D) / (D ** 0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf)
+    mask = jnp.arange(S)[None, :] < kv_len[:, None]            # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, vf)
+    return out.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: GC segment selection (Greedy / Cost-Benefit argmax).
+
+At fleet scale (the paper's deployment context: cloud block storage with
+thousands of volumes × up to millions of segments) victim selection is a
+large masked argmax over segment metadata every GC tick. The kernel streams
+segment records HBM→VMEM in (8, 128)-aligned tiles, scores each tile on the
+VPU, and carries a running (max, argmax) in the output block across the grid
+(its index map is constant, so the buffer persists between grid steps).
+
+Scores follow core/gc.py exactly:
+  greedy:        (n - n_valid) / max(n, 1)
+  cost_benefit:  (1-u) * age / (1+u),  u = n_valid/max(n,1), age = t - stime
+Ineligible segments (not sealed, or zero garbage) score -inf; ties resolve to
+the lowest index (matching jnp.argmax).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+TILE_ROWS = 8  # (8, 128) int32/fp32 tile
+
+
+def _score_tile(n, nv, stime, state, t, selector):
+    nf = n.astype(jnp.float32)
+    nvf = nv.astype(jnp.float32)
+    garbage = nf - nvf
+    if selector == "greedy":
+        score = garbage / jnp.maximum(nf, 1.0)
+    else:
+        u = nvf / jnp.maximum(nf, 1.0)
+        age = jnp.maximum(t - stime, 0).astype(jnp.float32)
+        score = (1.0 - u) * age / (1.0 + u)
+    eligible = (state == 2) & (garbage > 0)
+    return jnp.where(eligible, score, -jnp.inf)
+
+
+def _segsel_kernel(t_ref, n_ref, nv_ref, stime_ref, state_ref,
+                   out_ref, *, selector):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = -jnp.inf   # running max score
+        out_ref[0, 1] = -1.0       # running argmax (flat index, as float)
+
+    t = t_ref[0, 0]
+    score = _score_tile(n_ref[...], nv_ref[...], stime_ref[...], state_ref[...],
+                        t, selector)
+    base = i * TILE_ROWS * LANE
+    r = jax.lax.broadcasted_iota(jnp.int32, score.shape, 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, score.shape, 1)
+    flat = base + r * LANE + c
+
+    local_max = jnp.max(score)
+    local_arg = jnp.min(jnp.where(score >= local_max, flat, jnp.int32(2 ** 30)))
+
+    best = out_ref[0, 0]
+    take = local_max > best
+    out_ref[0, 0] = jnp.where(take, local_max, best)
+    out_ref[0, 1] = jnp.where(take, local_arg.astype(jnp.float32), out_ref[0, 1])
+
+
+@functools.partial(jax.jit, static_argnames=("selector", "interpret"))
+def segment_select(seg_n: jax.Array, seg_nvalid: jax.Array, seg_stime: jax.Array,
+                   seg_state: jax.Array, t: jax.Array, *,
+                   selector: str = "cost_benefit", interpret: bool = True):
+    """Victim segment argmax. 1-D int32 inputs of equal length (padded to a
+    multiple of 1024 internally; padding scores -inf). Returns (idx, score);
+    idx == -1 when no segment is eligible."""
+    (S,) = seg_n.shape
+    tile = TILE_ROWS * LANE
+    Sp = ((S + tile - 1) // tile) * tile
+    pad = Sp - S
+
+    def prep(x):
+        x = jnp.pad(x.astype(jnp.int32), (0, pad))
+        return x.reshape(Sp // LANE, LANE)
+
+    n2, nv2, st2, state2 = map(prep, (seg_n, seg_nvalid, seg_stime, seg_state))
+
+    out = pl.pallas_call(
+        functools.partial(_segsel_kernel, selector=selector),
+        grid=(Sp // tile,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((TILE_ROWS, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_ROWS, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        interpret=interpret,
+    )(t.reshape(1, 1).astype(jnp.int32), n2, nv2, st2, state2)
+    score = out[0, 0]
+    idx = out[0, 1].astype(jnp.int32)
+    return jnp.where(jnp.isfinite(score), idx, -1), score

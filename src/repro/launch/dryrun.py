@@ -1,0 +1,301 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be imported/run before any other jax usage in the process: the first two
+lines pin 512 placeholder host devices so ``jax.make_mesh`` can build the
+production meshes. Nothing here allocates device memory — inputs are
+ShapeDtypeStructs; ``.compile()`` produces the executable + memory/cost
+analyses that EXPERIMENTS.md §Dry-run and §Roofline read.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both --out out.json
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.distributed import Sharder, ShardingOptions, abstract_params  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.training import AdamWConfig, make_train_step  # noqa: E402
+from repro.training.optimizer import init_opt_state  # noqa: E402
+
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+
+def _abstract_opt_state(param_structs, opt_dtype):
+    def mom(s):
+        return jax.ShapeDtypeStruct(s.shape, opt_dtype, sharding=s.sharding)
+    return {
+        "m": jax.tree.map(mom, param_structs),
+        "v": jax.tree.map(mom, param_structs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of communication ops in optimized HLO.
+
+    Parses shapes like 'bf16[16,512,1024]' on lines whose op is a collective;
+    counts each op's *output* shape bytes (a close proxy for bytes moved; for
+    all-reduce it equals the tensor size)."""
+    dt_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f64": 8,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3": 1,
+                "f8e5m2": 1, "s16": 2, "u16": 2}
+    totals = {k: 0 for k in ("all-gather", "all-reduce", "reduce-scatter",
+                             "all-to-all", "collective-permute")}
+    shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(.*)", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        cm = COLLECTIVE_RE.search(rhs.split("(")[0] if "(" in rhs else rhs)
+        if not cm:
+            continue
+        kind = cm.group(1)
+        nbytes = 0
+        # output shape(s): everything before the op name
+        head = rhs.split(cm.group(1))[0]
+        for dt, dims in shape_re.findall(head):
+            if dt not in dt_bytes:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * dt_bytes[dt]
+        totals[kind] += nbytes
+    totals["total"] = sum(totals.values())
+    return totals
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               options: ShardingOptions = None,
+               cfg_override=None):
+    """Returns (jitted_fn, example_args) for one dry-run cell."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    if options is None:
+        # serving deployments load weights replicated across DP (no FSDP
+        # re-gather per token — §Perf iteration C1)
+        options = ShardingOptions(fsdp=(shape.kind == "train"))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sharder = Sharder(mesh, cfg, options)
+    model = build_model(cfg)
+    specs = model.param_specs()
+    params = abstract_params(specs, sharder, cfg.pdtype())
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(state_dtype=cfg.optimizer_dtype)
+        step_fn = make_train_step(model, cfg, sharder, opt_cfg)
+        state = {"params": params, "opt": _abstract_opt_state(params, jnp.dtype(cfg.optimizer_dtype))}
+        batch = model.input_specs(shape, abstract=True, sharder=sharder)
+        return mesh, jax.jit(step_fn, donate_argnums=0), (state, batch)
+
+    if shape.kind == "prefill":
+        from repro.serving.engine import make_prefill_fn
+        fn = make_prefill_fn(model, cfg, sharder)
+        cache = abstract_params(model.cache_specs(shape.global_batch, shape.seq_len),
+                                sharder, cfg.cdtype())
+        cache = _fix_cache_dtypes(cfg, cache)
+        batch = model.input_specs(shape, abstract=True, sharder=sharder)
+        return mesh, jax.jit(fn, donate_argnums=2), (params, batch, cache)
+
+    # decode: one new token against a seq_len KV history
+    from repro.serving.engine import make_decode_fn
+    fn = make_decode_fn(model, cfg, sharder)
+    cache = abstract_params(model.cache_specs(shape.global_batch, shape.seq_len),
+                            sharder, cfg.cdtype())
+    cache = _fix_cache_dtypes(cfg, cache)
+    B = shape.global_batch
+    tok_sh = sharder.sharding((B, 1), ("batch", "seq"))
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32, sharding=tok_sh)
+    return mesh, jax.jit(fn, donate_argnums=2), (params, tokens, cache)
+
+
+def _fix_cache_dtypes(cfg, cache):
+    """Positions int32; rwkv state fp32 (mirrors models init_cache)."""
+    from repro.models.transformer import cache_dtype
+
+    def fix(path, s):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        dt = cache_dtype(key, s.dtype)
+        return jax.ShapeDtypeStruct(s.shape, dt, sharding=s.sharding)
+
+    out = jax.tree_util.tree_map_with_path(fix, cache)
+    if isinstance(out, dict) and "pos" in out:
+        out["pos"] = jax.ShapeDtypeStruct(out["pos"].shape, jnp.int32,
+                                          sharding=out["pos"].sharding)
+    return out
+
+
+def _analysis_cfg(cfg, k: int):
+    """Unrolled reduced-depth config for exact cost extrapolation: XLA's cost
+    model counts while-loop bodies once, so we compile unrolled depths
+    k ∈ {1, 2} (same tail / same intercept) and extrapolate linearly."""
+    import dataclasses
+    period = len(cfg.block_pattern) if cfg.block_pattern else 1
+    tail = cfg.n_layers % period
+    repl = dict(n_layers=period * k + tail, microbatches=1, scan_layers=False)
+    if cfg.encoder_layers:
+        repl["encoder_layers"] = k
+    return dataclasses.replace(cfg, **repl)
+
+
+def _measure(arch, shape_name, multi_pod, options, cfg):
+    mesh, fn, args = build_cell(arch, shape_name, multi_pod, options,
+                                cfg_override=cfg)
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        coll = parse_collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+    }
+
+
+VARIANTS = {
+    "baseline": {},
+    # A1: grouped MoE routing (dispatch cost linear in group size)
+    "moe_g512": {"route_group": 512},
+    # A2: A1 + sequence-parallel attention (kills S×S score all-reduces)
+    "moe_g512_sp": {"route_group": 512,
+                    "options": ShardingOptions(sp_attention=True)},
+    # B1: A1 + SP + 2D weight-stationary experts (no expert all-gather)
+    "moe_g512_2d": {"route_group": 512,
+                    "options": ShardingOptions(moe_2d=True, sp_attention=True)},
+    # A2 alone (dense archs)
+    "sp_attn": {"options": ShardingOptions(sp_attention=True)},
+    # C1: serving without FSDP re-gather (weights replicated over data)
+    "serve_nofsdp": {"options": ShardingOptions(fsdp=False)},
+    # D: pure data parallelism (small models drown in TP collectives)
+    "dp_only": {"options": ShardingOptions(overrides=tuple(
+        (k, None) for k in ("vocab", "ffn", "heads", "kv_heads", "head_dim",
+                            "lru", "rnn_out", "rnn_state", "moe_ffn")))},
+    # E: fewer grad-accumulation microbatches (fewer FSDP re-gathers)
+    "mb2": {"microbatches": 2},
+    "mb4": {"microbatches": 4},
+}
+
+
+def apply_variant(cfg, variant: str):
+    import dataclasses as _dc
+    spec = VARIANTS[variant]
+    options = spec.get("options", ShardingOptions())
+    repl = {}
+    if "route_group" in spec and cfg.moe is not None:
+        repl["moe"] = _dc.replace(cfg.moe, route_group=spec["route_group"])
+    if "microbatches" in spec:
+        repl["microbatches"] = spec["microbatches"]
+    if repl:
+        cfg = _dc.replace(cfg, **repl)
+    return cfg, options
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             options: ShardingOptions = None,
+             analyze: bool = True, variant: str = "baseline") -> dict:
+    cfg = get_config(arch)
+    cfg, var_options = apply_variant(cfg, variant)
+    if variant != "baseline":
+        options = var_options
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "variant": variant,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    t0 = time.time()
+    try:
+        # 1) production form: layer-scanned + microbatched — proves the
+        #    sharding config compiles and yields the memory analysis.
+        prod = _measure(arch, shape_name, multi_pod, options, cfg)
+        t1 = time.time()
+        rec.update(
+            status="ok",
+            compile_s=round(t1 - t0, 1),
+            n_chips=512 if multi_pod else 256,
+            model_params=cfg.n_params(),
+            model_params_active=cfg.n_active_params(),
+            memory=prod["memory"],
+        )
+        if analyze:
+            # 2) cost analysis: unrolled k=1,2 -> linear extrapolation to
+            #    full depth (exact for repeated layers).
+            period = len(cfg.block_pattern) if cfg.block_pattern else 1
+            k_full = cfg.n_layers // period
+            c1 = _measure(arch, shape_name, multi_pod, options, _analysis_cfg(cfg, 1))
+            c2 = _measure(arch, shape_name, multi_pod, options, _analysis_cfg(cfg, 2))
+
+            def extrap(a, b):
+                return a + (b - a) * (k_full - 1)
+
+            rec["flops"] = extrap(c1["flops"], c2["flops"])
+            rec["bytes_accessed"] = extrap(c1["bytes_accessed"], c2["bytes_accessed"])
+            rec["collective_bytes"] = {
+                key: int(extrap(c1["collectives"][key], c2["collectives"][key]))
+                for key in c1["collectives"]
+            }
+            rec["analysis_compile_s"] = round(time.time() - t1, 1)
+    except Exception as e:  # noqa: BLE001 - report compile failures per cell
+        rec.update(status="error", error=f"{type(e).__name__}: {e}"[:2000])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"], default="off")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                rec = run_cell(arch, shape, mp, variant=args.variant)
+                print(json.dumps(rec), flush=True)
+                cells.append(rec)
+                jax.clear_caches()
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(cells, f, indent=1)
+    n_err = sum(1 for c in cells if c["status"] == "error")
+    print(f"# done: {len(cells)} cells, {n_err} errors", flush=True)
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

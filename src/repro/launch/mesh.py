@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing never touches jax
+device state. Single pod: 256 chips as (data=16, model=16). Multi-pod: 2 pods
+= 512 chips as (pod=2, data=16, model=16); the pod axis extends data
+parallelism and crosses DCN, so only gradient reductions (and optional
+compressed collectives) traverse it.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over the actual local devices (tests / examples)."""
+    n = len(jax.devices())
+    model_axis = min(model_axis, n)
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

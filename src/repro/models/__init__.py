@@ -1,0 +1,4 @@
+"""Model zoo: 10 assigned architectures behind one facade."""
+from .zoo import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,391 @@
+"""Shared model substrate: param specs, norms, RoPE, attention, MLP, MoE.
+
+Parameters are described by ``ParamSpec`` trees (shape + logical axes +
+init), from which both concrete params (smoke tests / real training) and
+abstract ShapeDtypeStructs with shardings (dry-run) are derived. Logical
+axis names are resolved to mesh axes by ``distributed/sharding.py``.
+
+RoPE uses the interleaved (even/odd pair) formulation so a head_dim-sharded
+layout keeps rotations shard-local (pairs are adjacent; shards hold >= 4
+consecutive dims on every assigned mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                      # logical axis names, len == len(shape)
+    init: str = "normal"             # normal | zeros | ones | embed
+    scale: float = 1.0               # stddev multiplier / fan-in override
+
+
+def make_param(spec: ParamSpec, key, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.full(spec.shape, spec.scale, dtype)  # constant init
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape) * spec.scale).astype(dtype)
+    fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[0], 1)
+    if len(spec.shape) >= 3:  # (.., in, out) conventions: all but last are in
+        fan_in = math.prod(spec.shape[:-1])
+    std = spec.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape) * std).astype(dtype)
+
+
+def init_tree(specs, key, dtype):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [make_param(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def stack_spec(spec: ParamSpec, n: int) -> ParamSpec:
+    """Prepend a scanned-layers axis."""
+    return ParamSpec((n,) + spec.shape, ("layers",) + spec.axes, spec.init, spec.scale)
+
+
+def stack_tree(specs, n: int):
+    return jax.tree.map(lambda s: stack_spec(s, n), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_index(tree, i: int):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def scan_or_unroll(f, carry, xs, *, unroll: bool):
+    """lax.scan, or a python unroll with identical semantics.
+
+    The unrolled form exists for dry-run cost analysis: XLA's cost model
+    counts a while-loop body once regardless of trip count, so the roofline
+    pass compiles small unrolled depths and extrapolates (launch/dryrun.py).
+    """
+    if not unroll:
+        return jax.lax.scan(f, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        carry, y = f(carry, tree_index(xs, i))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *z: jnp.stack(z), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# -- norms --------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * (1.0 + scale.astype(x.dtype))
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale.astype(x.dtype) + bias.astype(x.dtype)
+
+
+def norm_specs(cfg, dim_axis="act_embed", dim=None):
+    d = dim or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((d,), (dim_axis,), "ones"),
+                "bias": ParamSpec((d,), (dim_axis,), "zeros")}
+    return {"scale": ParamSpec((d,), (dim_axis,), "zeros")}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# -- positions ----------------------------------------------------------------
+
+def rope_freqs(hd: int, fraction: float, theta: float):
+    rot = int(hd * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, *, fraction=1.0, theta=1e4):
+    """Interleaved RoPE. x: (..., S, H, D); positions: (..., S)."""
+    hd = x.shape[-1]
+    inv, rot = rope_freqs(hd, fraction, theta)
+    if rot == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x_even = xr[..., 0::2]
+    x_odd = xr[..., 1::2]
+    r_even = x_even * cos - x_odd * sin
+    r_odd = x_even * sin + x_odd * cos
+    out = jnp.stack([r_even, r_odd], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+def sinusoidal_pos(positions, d):
+    inv = 1.0 / (10000 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe[..., :d]
+
+
+# -- attention ----------------------------------------------------------------
+
+def attention_specs(cfg):
+    d, H, Hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    specs = {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, Hk, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, Hk, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.use_bias:
+        specs["bq"] = ParamSpec((H, hd), ("heads", "head_dim"), "zeros")
+        specs["bk"] = ParamSpec((Hk, hd), ("kv_heads", "head_dim"), "zeros")
+        specs["bv"] = ParamSpec((Hk, hd), ("kv_heads", "head_dim"), "zeros")
+        specs["bo"] = ParamSpec((d,), ("act_embed",), "zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), ("head_dim",), "zeros")
+        specs["k_norm"] = ParamSpec((hd,), ("head_dim",), "zeros")
+    return specs
+
+
+def _mask_bias(mode, q_pos, k_pos, window=0):
+    """(..., Sq, Sk) additive mask. mode: causal | prefix | full | window."""
+    if mode == "full":
+        return None
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    if mode == "window":
+        ok = (diff >= 0) & (diff < window)
+    else:
+        ok = diff >= 0
+    return jnp.where(ok, 0.0, -1e30)
+
+
+def mha(cfg, p, x, positions, sharder, *, mode="causal", kv=None, kv_positions=None,
+        prefix_len=None, window=0):
+    """General attention. x: (B, S, D). kv: override source for cross-attn.
+    Returns (B, S, D)."""
+    B, S, D = x.shape
+    H, Hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = x.dtype
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    src = kv if kv is not None else x
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(cd))
+    if cfg.use_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if cfg.pos == "rope" and kv is None:
+        q = apply_rope(q, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    use_sp = (getattr(getattr(sharder, "options", None), "sp_attention", False)
+              and getattr(sharder, "attn_mode", "heads") == "head_dim"
+              and mode != "window" and window == 0)
+    if use_sp:
+        # sequence-parallel attention: queries seq-sharded with full heads —
+        # the S×S score tensor never crosses chips (perf iteration A2).
+        # Only for head_dim-TP archs (heads-TP already keeps scores local)
+        # and non-windowed attention.
+        q = sharder.constraint(q, "batch", "seq_attn", "heads_full", "head_dim_full")
+        k = sharder.constraint(k, "batch", None, "heads_full", "head_dim_full")
+        v = sharder.constraint(v, "batch", None, "heads_full", "head_dim_full")
+    else:
+        q = sharder.constraint(q, "batch", "seq", "heads", "head_dim")
+        k = sharder.constraint(k, "batch", "seq", "kv_heads", "head_dim")
+
+    kp = kv_positions if kv_positions is not None else positions
+    out = gqa_attend(q, k, v, mode=mode, q_pos=positions, k_pos=kp,
+                     prefix_len=prefix_len, window=window)
+    if use_sp:
+        # anchor the PV product seq-sharded so GSPMD reshards the (B,S,H,hd)
+        # output, never the (B,H,S,S) scores
+        out = sharder.constraint(out, "batch", "seq_attn", "heads_full",
+                                 "head_dim_full")
+    out = sharder.constraint(out, "batch", "seq", "heads", "head_dim")
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    if cfg.use_bias:
+        y = y + p["bo"].astype(cd)
+    return y
+
+
+def gqa_attend(q, k, v, *, mode, q_pos, k_pos, prefix_len=None, window=0):
+    """(B,Sq,H,hd) x (B,Sk,Hk,hd) -> (B,Sq,H,hd), fp32 softmax."""
+    B, Sq, H, hd = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Sq, Hk, G, hd)
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    bias = _mask_bias(mode, q_pos, k_pos, window)
+    if bias is not None:
+        if bias.ndim == 2:
+            bias = bias[None, None, None]
+        elif bias.ndim == 3:  # (B, Sq, Sk)
+            bias = bias[:, None, None]
+        scores = scores + bias
+    if prefix_len is not None:  # prefix-LM: bidirectional attention in prefix
+        both_prefix = (q_pos[..., :, None] < prefix_len[..., None, None]) & \
+                      (k_pos[..., None, :] < prefix_len[..., None, None])
+        scores = jnp.where(both_prefix[:, None, None], jnp.maximum(scores, -1e29), scores)
+        # unmask: recompute without causal restriction inside prefix
+        raw = jnp.einsum("bqhgk,bshk->bhgqs", qg, k).astype(jnp.float32) / math.sqrt(hd)
+        scores = jnp.where(both_prefix[:, None, None], raw, scores)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def decode_attend(q, k_cache, v_cache, kv_len, *, window=0):
+    """Single-token decode. q: (B,1,H,hd); caches: (B,S,Hk,hd); kv_len (B,)."""
+    B, _, H, hd = q.shape
+    S, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hk
+    qg = q.reshape(B, Hk, G, hd)
+    scores = jnp.einsum("bhgk,bshk->bhgs", qg, k_cache).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    idx = jnp.arange(S)[None]
+    ok = idx < kv_len[:, None]
+    if window:
+        ok = ok & (idx >= (kv_len[:, None] - window))
+    scores = jnp.where(ok[:, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgs,bshk->bhgk", w, v_cache)
+    return out.reshape(B, 1, H, hd)
+
+
+# -- MLP / MoE ----------------------------------------------------------------
+
+def mlp_specs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp == "swiglu":
+        specs = {
+            "wi": ParamSpec((d, f), ("embed", "ffn")),
+            "wg": ParamSpec((d, f), ("embed", "ffn")),
+            "wo": ParamSpec((f, d), ("ffn", "embed")),
+        }
+    else:
+        specs = {
+            "wi": ParamSpec((d, f), ("embed", "ffn")),
+            "wo": ParamSpec((f, d), ("ffn", "embed")),
+        }
+    if cfg.use_bias:
+        specs["bi"] = ParamSpec((f,), ("ffn",), "zeros")
+        specs["bo"] = ParamSpec((d,), ("act_embed",), "zeros")
+    return specs
+
+
+def mlp(cfg, p, x, sharder):
+    cd = x.dtype
+    h = x @ p["wi"].astype(cd)
+    if cfg.use_bias:
+        h = h + p["bi"].astype(cd)
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(cd)) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = sharder.constraint(h, "batch", "seq", "ffn")
+    y = h @ p["wo"].astype(cd)
+    if cfg.use_bias:
+        y = y + p["bo"].astype(cd)
+    return y
+
+
+def moe_specs(cfg):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    return {
+        "router": ParamSpec((d, E), ("embed", "experts")),
+        "wi": ParamSpec((E, d, f), ("experts", "embed", "ffn")),
+        "wg": ParamSpec((E, d, f), ("experts", "embed", "ffn")),
+        "wo": ParamSpec((E, f, d), ("experts", "ffn", "embed")),
+    }
+
+
+def dataclasses_replace_route(cfg):
+    """cfg with route_group disabled (recursion guard for grouped moe)."""
+    import dataclasses
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, route_group=0))
+
+
+def moe_block(cfg, p, x, sharder, *, capacity_factor=1.25):
+    """Top-k MoE with capacity-based one-hot dispatch (TPU-dense einsums).
+
+    FLOPs scale with k × capacity_factor (not E): tokens are dispatched to an
+    (E, capacity) buffer; overflow tokens are dropped (position priority) and
+    pass through the residual only. Aux load-balance loss is returned.
+
+    With ``cfg.moe.route_group = G > 0`` the sequence is split into routing
+    groups of G tokens and capacity is per-group: the dispatch tensor shrinks
+    from (S, E, 1.25·K·S/E) to per-group (G, E, 1.25·K·G/E) — dispatch FLOPs
+    and bytes drop by S/G while expert FLOPs are unchanged.
+    """
+    B, S, D = x.shape
+    G = cfg.moe.route_group
+    if G and G < S and S % G == 0:
+        xg = x.reshape(B * (S // G), G, D)
+        y, aux = moe_block(
+            dataclasses_replace_route(cfg), p, xg, sharder,
+            capacity_factor=capacity_factor)
+        return y.reshape(B, S, D), aux
+    E, K = cfg.moe.n_experts, cfg.moe.experts_per_token
+    cd = x.dtype
+    C = max(int(capacity_factor * K * S / E), 1)
+
+    logits = (x @ p["router"].astype(cd)).astype(jnp.float32)   # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)               # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)     # (B,S,K,E)
+    # position within each expert's buffer (priority by sequence position)
+    pos_in_expert = jnp.cumsum(onehot.reshape(B, S * K, E), axis=1).reshape(B, S, K, E)
+    pos_in_expert = (pos_in_expert - 1.0) * onehot
+    keep = (pos_in_expert < C) & (onehot > 0)
+    slot = jax.nn.one_hot(pos_in_expert.astype(jnp.int32), C, dtype=jnp.float32)
+    dispatch = (keep[..., None] * slot)                          # (B,S,K,E,C)
+    dispatch = dispatch.sum(2)                                   # (B,S,E,C)
+    combine = (gate_vals[..., None] * onehot).sum(2)[..., None] * dispatch  # (B,S,E,C)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch.astype(cd), x)   # (E,B,C,D)
+    if getattr(getattr(sharder, "options", None), "moe_2d", False):
+        # 2D weight-stationary experts: reshard dispatched activations so the
+        # contraction dim (d_model) is data-sharded like the weights — XLA
+        # then contracts locally + psums outputs instead of all-gathering
+        # 300B-scale expert weights every microbatch (perf iteration B1).
+        xin = sharder.constraint(xin, "experts", None, None, "embed")
+    h = jnp.einsum("ebcd,edf->ebcf", xin, p["wi"].astype(cd))
+    g = jnp.einsum("ebcd,edf->ebcf", xin, p["wg"].astype(cd))
+    h = jax.nn.silu(g) * h
+    h = sharder.constraint(h, "experts", "batch", None, "ffn")
+    eout = jnp.einsum("ebcf,efd->ebcd", h, p["wo"].astype(cd))
+    y = jnp.einsum("bsec,ebcd->bsd", combine.astype(cd), eout)
+
+    # aux load-balance loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                                 # (E,)
+    ce = onehot.sum(2).mean(axis=(0, 1))                         # fraction routed
+    aux = E * jnp.sum(me * ce) * cfg.moe.load_balance_coef
+    return y, aux

@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> {gate branch: Linear+GeLU} ⊙ {recurrent branch: Linear -> causal
+Conv1D(width 4) -> RG-LRU} -> out Linear.
+
+RG-LRU (per channel):
+  r_t = sigmoid(W_r x_t + b_r)          recurrence gate
+  i_t = sigmoid(W_i x_t + b_i)          input gate
+  a_t = a^(c * r_t),  a = sigmoid(Λ)    (c = 8)
+  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses an associative scan over the diagonal linear
+recurrence; decode carries (h, conv window) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec
+
+C_RGLRU = 8.0
+CONV_W = 4
+
+
+def rglru_specs(cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "w_in": ParamSpec((d, w), ("embed", "lru")),
+        "w_gate": ParamSpec((d, w), ("embed", "lru")),
+        "conv": ParamSpec((CONV_W, w), (None, "lru")),
+        "w_r": ParamSpec((w, w), ("lru_in", "lru")),
+        "b_r": ParamSpec((w,), ("lru",), "zeros"),
+        "w_i": ParamSpec((w, w), ("lru_in", "lru")),
+        "b_i": ParamSpec((w,), ("lru",), "zeros"),
+        "lam": ParamSpec((w,), ("lru",), "ones", 2.0),   # a = sigmoid(lam*?) init toward ~0.9
+        "w_out": ParamSpec((w, d), ("lru", "embed")),
+    }
+
+
+def _gates(p, u, cd):
+    r = jax.nn.sigmoid(u @ p["w_r"].astype(cd) + p["b_r"].astype(cd))
+    i = jax.nn.sigmoid(u @ p["w_i"].astype(cd) + p["b_i"].astype(cd))
+    log_a_base = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))
+    log_a = C_RGLRU * r.astype(jnp.float32) * log_a_base   # (..., w)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * \
+        (i * u).astype(jnp.float32)
+    return a, b
+
+
+def _causal_conv(p, u, cd, carry=None):
+    """Causal depthwise conv, width 4. u: (B, S, w). carry: (B, CONV_W-1, w)."""
+    if carry is None:
+        pad = jnp.zeros(u.shape[:1] + (CONV_W - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = carry.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    k = p["conv"].astype(cd)
+    out = sum(up[:, i : i + u.shape[1]] * k[i] for i in range(CONV_W))
+    new_carry = up[:, -(CONV_W - 1):]
+    return out, new_carry
+
+
+def rglru_forward(cfg, p, x, sharder, *, h0=None, conv0=None, return_state=False):
+    """Full-sequence block. x: (B, S, d_model) -> (B, S, d_model)."""
+    cd = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(cd))
+    u = x @ p["w_in"].astype(cd)
+    u = sharder.constraint(u, "batch", "seq", "lru")
+    u, conv_carry = _causal_conv(p, u, cd, conv0)
+    a, b = _gates(p, u, cd)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(cd)
+    y = (h * gate) @ p["w_out"].astype(cd)
+    if return_state:
+        return y, (h[:, -1], conv_carry)
+    return y
+
+
+def rglru_decode(cfg, p, x_t, state):
+    """One step. x_t: (B, 1, d). state: (h (B,w), conv (B,3,w))."""
+    cd = x_t.dtype
+    h_prev, conv_prev = state
+    gate = jax.nn.gelu(x_t @ p["w_gate"].astype(cd))
+    u = x_t @ p["w_in"].astype(cd)                      # (B,1,w)
+    window = jnp.concatenate([conv_prev.astype(cd), u], axis=1)  # (B,4,w)
+    k = p["conv"].astype(cd)
+    u_c = sum(window[:, i] * k[i] for i in range(CONV_W))[:, None]  # (B,1,w)
+    a, b = _gates(p, u_c, cd)
+    h = a[:, 0] * h_prev.astype(jnp.float32) + b[:, 0]
+    y = (h[:, None].astype(cd) * gate) @ p["w_out"].astype(cd)
+    return y, (h, window[:, 1:])

@@ -1,0 +1,196 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mix with
+data-dependent per-channel decay, plus squared-ReLU channel mix.
+
+Time mix (per head, head dim N):
+  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+  o_t = r_t · (S_{t-1} + diag(u ⊙ k_t) v_t)      (u: per-channel bonus)
+
+Training uses the chunked-parallel form: within a chunk of length C the
+cumulative decays A_t = Π_{τ<=t} w_τ turn the recurrence into two masked
+matmuls (MXU-friendly); the (H, N, N) state is carried across chunks with a
+`lax.scan`. Decode is the plain one-step recurrence. Token-shift lerps use a
+simplified static mix (the low-rank dynamic mix of the full model is kept in
+the decay path where it matters most).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamSpec
+
+CHUNK = 64
+LORA_R = 64
+
+
+def rwkv_specs(cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    N = cfg.rnn_head_dim
+    assert H * N == d, (H, N, d)
+    f = cfg.d_ff
+    return {
+        # time mix
+        "mix_r": ParamSpec((d,), ("act_embed",), "zeros"),
+        "mix_k": ParamSpec((d,), ("act_embed",), "zeros"),
+        "mix_v": ParamSpec((d,), ("act_embed",), "zeros"),
+        "mix_g": ParamSpec((d,), ("act_embed",), "zeros"),
+        "mix_w": ParamSpec((d,), ("act_embed",), "zeros"),
+        "w_r": ParamSpec((d, d), ("embed", "rnn_out")),
+        "w_k": ParamSpec((d, d), ("embed", "rnn_out")),
+        "w_v": ParamSpec((d, d), ("embed", "rnn_out")),
+        "w_g": ParamSpec((d, d), ("embed", "rnn_out")),
+        "w_o": ParamSpec((d, d), ("rnn_out", "embed")),
+        "decay_base": ParamSpec((d,), ("act_embed",), "ones", -6.0),
+        "decay_lora_a": ParamSpec((d, LORA_R), ("embed", None)),
+        "decay_lora_b": ParamSpec((LORA_R, d), (None, "rnn_out")),
+        "bonus": ParamSpec((d,), ("act_embed",), "ones", 0.5),
+        "ln_x_scale": ParamSpec((d,), ("act_embed",), "ones"),
+        # channel mix
+        "cmix_k": ParamSpec((d,), ("act_embed",), "zeros"),
+        "w_ck": ParamSpec((d, f), ("embed", "ffn")),
+        "w_cv": ParamSpec((f, d), ("ffn", "embed")),
+    }
+
+
+def _token_shift(x, mix, prev=None):
+    """lerp(x_{t-1}, x_t, mix). prev: (B, 1, D) carry for decode/chunk edge."""
+    if prev is None:
+        prev_x = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    else:
+        prev_x = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    m = jax.nn.sigmoid(mix).astype(x.dtype)
+    return x * m + prev_x * (1 - m)
+
+
+def _decay(p, xw, cd):
+    """log-decay (negative) per channel/time: w_t in (0,1)."""
+    lora = jnp.tanh(xw @ p["decay_lora_a"].astype(cd)) @ p["decay_lora_b"].astype(cd)
+    logw = -jnp.exp(jnp.clip(p["decay_base"].astype(jnp.float32)
+                             + lora.astype(jnp.float32), -8.0, 2.0))
+    return logw  # (B, S, D), <= 0
+
+
+def _heads(x, H, N):
+    return x.reshape(x.shape[0], x.shape[1], H, N)
+
+
+def rwkv_time_mix(cfg, p, x, sharder, *, state=None, shift_prev=None,
+                  return_state=False):
+    """x: (B, S, D). state: (B, H, N, N) carried k→v outer-product memory."""
+    B, S, D = x.shape
+    H, N = cfg.n_heads, cfg.rnn_head_dim
+    cd = x.dtype
+
+    xr = _token_shift(x, p["mix_r"], shift_prev)
+    xk = _token_shift(x, p["mix_k"], shift_prev)
+    xv = _token_shift(x, p["mix_v"], shift_prev)
+    xg = _token_shift(x, p["mix_g"], shift_prev)
+    xw = _token_shift(x, p["mix_w"], shift_prev)
+
+    r = _heads(xr @ p["w_r"].astype(cd), H, N)
+    k = _heads(xk @ p["w_k"].astype(cd), H, N)
+    v = _heads(xv @ p["w_v"].astype(cd), H, N)
+    g = jax.nn.silu(xg @ p["w_g"].astype(cd))
+    logw = _heads(_decay(p, xw, cd), H, N)               # (B,S,H,N) fp32
+    u = p["bonus"].astype(jnp.float32).reshape(H, N)
+
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+
+    S_pad = ((S + CHUNK - 1) // CHUNK) * CHUNK
+    pad = S_pad - S
+
+    def padseq(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    rc = padseq(r).reshape(B, -1, CHUNK, H, N).astype(jnp.float32)
+    kc = padseq(k).reshape(B, -1, CHUNK, H, N).astype(jnp.float32)
+    vc = padseq(v).reshape(B, -1, CHUNK, H, N).astype(jnp.float32)
+    wc = padseq(logw).reshape(B, -1, CHUNK, H, N)        # log decays (<=0)
+    n_chunks = S_pad // CHUNK
+
+    def chunk_step(carry, inp):
+        st = carry                                        # (B,H,N,N) fp32
+        rch, kch, vch, wch = inp                          # (B,C,H,N)
+        cum = jnp.cumsum(wch, axis=1)                     # logA_t, inclusive
+        cum_prev = cum - wch                              # logA_{t-1} (exclusive)
+        # inter-chunk: o_inter[t] = (r_t * A_{t-1}) · S
+        q_in = rch * jnp.exp(cum_prev)
+        o_inter = jnp.einsum("bchn,bhnm->bchm", q_in, st)
+        # intra-chunk: scores[t,s] = Σ_n r_t[n] k_s[n] exp(logA_{t-1}-logA_s), s<t
+        # factored with chunk-start reference: r' = r·exp(logA_{t-1}),
+        # k' = k·exp(-logA_s); strong-decay tails clip harmlessly (their
+        # counterpart factor underflows first).
+        q_f = rch * jnp.exp(cum_prev)                     # cum_prev <= 0
+        k_f = kch * jnp.exp(jnp.clip(-cum, None, 30.0))
+        qk = jnp.einsum("bchn,bdhn->bhcd", q_f, k_f)
+        mask = jnp.tril(jnp.ones((CHUNK, CHUNK), jnp.float32), -1)
+        qk = qk * mask[None, None]
+        # diagonal bonus term: (r_t ⊙ u ⊙ k_t) · v_t
+        diag = jnp.einsum("bchn,hn,bchn->bch", rch, u, kch)
+        o_intra = jnp.einsum("bhcd,bdhn->bchn", qk, vch) + diag[..., None] * vch
+        # state update to end of chunk
+        decay_all = jnp.exp(cum[:, -1])                   # (B,H,N)
+        k_scaled = kch * jnp.exp(jnp.clip(cum[:, -1][:, None] - cum, -60.0, 30.0))
+        st_new = st * decay_all[..., None] + jnp.einsum("bchn,bchm->bhnm", k_scaled, vch)
+        return st_new, o_inter + o_intra
+
+    inputs = tuple(t.transpose(1, 0, 2, 3, 4) for t in (rc, kc, vc, wc))
+    state, o = jax.lax.scan(chunk_step, state, inputs)
+    o = o.transpose(1, 0, 2, 3, 4).reshape(B, S_pad, H, N)[:, :S]
+
+    # per-head groupnorm, then gate + out proj
+    o32 = o.astype(jnp.float32)
+    mu = o32.mean(-1, keepdims=True)
+    var = o32.var(-1, keepdims=True)
+    o = ((o32 - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, D)
+    o = o.astype(cd) * p["ln_x_scale"].astype(cd)
+    y = (o * g) @ p["w_o"].astype(cd)
+    if return_state:
+        return y, (state, x[:, -1:])
+    return y
+
+
+def rwkv_channel_mix(cfg, p, x, shift_prev=None, return_state=False):
+    cd = x.dtype
+    xk = _token_shift(x, p["cmix_k"], shift_prev)
+    h = jnp.square(jax.nn.relu(xk @ p["w_ck"].astype(cd)))
+    y = h @ p["w_cv"].astype(cd)
+    if return_state:
+        return y, x[:, -1:]
+    return y
+
+
+def rwkv_decode(cfg, p, x_t, state):
+    """One token. state: (S (B,H,N,N) fp32, tm_prev (B,1,D), cm_prev (B,1,D))."""
+    B, _, D = x_t.shape
+    H, N = cfg.n_heads, cfg.rnn_head_dim
+    cd = x_t.dtype
+    st, tm_prev, cm_prev = state
+
+    xr = _token_shift(x_t, p["mix_r"], tm_prev)
+    xk = _token_shift(x_t, p["mix_k"], tm_prev)
+    xv = _token_shift(x_t, p["mix_v"], tm_prev)
+    xg = _token_shift(x_t, p["mix_g"], tm_prev)
+    xw = _token_shift(x_t, p["mix_w"], tm_prev)
+
+    r = (xr @ p["w_r"].astype(cd)).reshape(B, H, N).astype(jnp.float32)
+    k = (xk @ p["w_k"].astype(cd)).reshape(B, H, N).astype(jnp.float32)
+    v = (xv @ p["w_v"].astype(cd)).reshape(B, H, N).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["w_g"].astype(cd))
+    logw = _decay(p, xw, cd).reshape(B, H, N)
+    u = p["bonus"].astype(jnp.float32).reshape(H, N)
+
+    kv = jnp.einsum("bhn,bhm->bhnm", k, v)
+    o = jnp.einsum("bhn,bhnm->bhm", r, st + u[None, :, :, None] * kv)
+    st = st * jnp.exp(logw)[..., None] + kv
+
+    o32 = o
+    mu = o32.mean(-1, keepdims=True)
+    var = o32.var(-1, keepdims=True)
+    o = ((o32 - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, 1, D).astype(cd)
+    o = o * p["ln_x_scale"].astype(cd)
+    y = (o * g) @ p["w_o"].astype(cd)
+    return y, (st, x_t)

@@ -1,0 +1,447 @@
+"""Unified decoder LM: dense / MoE / hybrid (RG-LRU) / SSM (RWKV6) / prefix-LM.
+
+Layers are grouped into the config's repeating ``block_pattern`` period;
+per-period-position parameters are stacked over the repeat count and the
+whole stack is `lax.scan`-ned (compact HLO at 512-device compiles). The
+remainder layers (pattern not dividing n_layers) run unrolled.
+
+Three entry points per model:
+  forward(params, tokens, ...)         -> logits (train / prefill-all-logits)
+  prefill(params, tokens, cache, ...)  -> (last-token logits, filled cache)
+  decode_step(params, tokens, cache,.) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import rglru, rwkv6
+from .common import (ParamSpec, apply_norm, apply_rope, attention_specs,
+                     decode_attend, gqa_attend, init_tree, mha, mlp,
+                     mlp_specs, moe_block, moe_specs, norm_specs, rmsnorm,
+                     scan_or_unroll, sinusoidal_pos, stack_tree)
+
+
+# -- per-block specs -----------------------------------------------------------
+
+def block_specs(cfg, kind: str):
+    if kind == "rwkv":
+        return {
+            "ln1": norm_specs(cfg),
+            "time_mix": rwkv6.rwkv_specs(cfg),
+            "ln2": norm_specs(cfg),
+        }
+    specs = {"ln1": norm_specs(cfg), "ln2": norm_specs(cfg)}
+    if kind in ("attn", "attn_local"):
+        specs["attn"] = attention_specs(cfg)
+    elif kind == "rglru":
+        specs["rec"] = rglru.rglru_specs(cfg)
+    if cfg.moe is not None:
+        specs["moe"] = moe_specs(cfg)
+    else:
+        specs["mlp"] = mlp_specs(cfg)
+    return specs
+
+
+def lm_specs(cfg):
+    pattern = cfg.pattern
+    period = len(cfg.block_pattern) if cfg.block_pattern else 1
+    n_full = cfg.n_layers // period
+    tail = pattern[n_full * period:]
+    specs = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"), "embed"),
+        "final_norm": norm_specs(cfg),
+        "blocks": {
+            f"p{i}_{kind}": stack_tree(block_specs(cfg, kind), n_full)
+            for i, kind in enumerate(pattern[:period])
+        } if n_full else {},
+        "tail": [block_specs(cfg, kind) for kind in tail],
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    if cfg.frontend == "siglip_stub":
+        # projection from (stub) vision embeddings into the LM stream
+        specs["vision_proj"] = ParamSpec((cfg.d_model, cfg.d_model), ("embed", "embed2"))
+    return specs
+
+
+# -- block application ---------------------------------------------------------
+
+def _apply_block(cfg, kind, p, h, positions, sharder, *, mode, prefix_len, aux):
+    y = apply_norm(cfg, p["ln1"], h)
+    if kind in ("attn", "attn_local"):
+        window = cfg.window if kind == "attn_local" else 0
+        attn_mode = "window" if kind == "attn_local" else mode
+        y = mha(cfg, p["attn"], y, positions, sharder, mode=attn_mode,
+                prefix_len=prefix_len, window=window)
+    elif kind == "rglru":
+        y = rglru.rglru_forward(cfg, p["rec"], y, sharder)
+    elif kind == "rwkv":
+        y = rwkv6.rwkv_time_mix(cfg, p["time_mix"], y, sharder)
+    h = h + y
+    y = apply_norm(cfg, p["ln2"], h)
+    if kind == "rwkv":
+        y = rwkv6.rwkv_channel_mix(cfg, p["time_mix"], y)
+    elif cfg.moe is not None:
+        y, a = moe_block(cfg, p["moe"], y, sharder)
+        aux = aux + a
+    else:
+        y = mlp(cfg, p["mlp"], y, sharder)
+    h = h + y
+    h = sharder.constraint(h, "batch", "seq", "act_embed")
+    return h, aux
+
+
+def forward(cfg, params, tokens, sharder, *, prefix_embeds=None):
+    """tokens: (B, S). prefix_embeds: (B, P, D) stub-frontend embeddings for
+    vlm/audio archs, prepended to the stream (prefix-LM mask).
+    Returns (logits (B, S_total, V), aux_loss)."""
+    cd = cfg.cdtype()
+    emb = params["embed"]
+    h = emb.astype(cd)[tokens]
+    if cfg.tie_embeddings:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, cd)
+    prefix_len = None
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(cd)
+        if "vision_proj" in params:
+            pe = pe @ params["vision_proj"].astype(cd)
+        h = jnp.concatenate([pe, h], axis=1)
+        prefix_len = jnp.full((h.shape[0],), prefix_embeds.shape[1], jnp.int32)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.pos == "sinusoidal":
+        h = h + sinusoidal_pos(positions, cfg.d_model).astype(cd)
+    h = sharder.constraint(h, "batch", "seq", "act_embed")
+
+    pattern = cfg.pattern
+    period = len(cfg.block_pattern) if cfg.block_pattern else 1
+    n_full = cfg.n_layers // period
+    aux = jnp.float32(0.0)
+
+    if n_full:
+        def scan_body(carry, layer_params):
+            h, aux = carry
+            for i, kind in enumerate(pattern[:period]):
+                def block_fn(p, h, aux, _kind=kind):
+                    return _apply_block(cfg, _kind, p, h, positions, sharder,
+                                        mode="causal", prefix_len=prefix_len,
+                                        aux=aux)
+                if cfg.remat:
+                    block_fn = jax.checkpoint(block_fn)
+                h, aux = block_fn(layer_params[f"p{i}_{kind}"], h, aux)
+            return (h, aux), None
+
+        (h, aux), _ = scan_or_unroll(scan_body, (h, aux), params["blocks"],
+                                     unroll=not cfg.scan_layers)
+    for p_tail, kind in zip(params["tail"], pattern[n_full * period:]):
+        h, aux = _apply_block(cfg, kind, p_tail, h, positions, sharder,
+                              mode="causal", prefix_len=prefix_len, aux=aux)
+
+    h = apply_norm(cfg, params["final_norm"], h)
+    logits = _lm_logits(cfg, params, h, sharder)
+    return logits, aux
+
+
+def _lm_logits(cfg, params, h, sharder):
+    cd = h.dtype
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(cd))
+    else:
+        logits = h @ params["lm_head"].astype(cd)
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return sharder.constraint(logits, "batch", "seq", "vocab")
+
+
+# -- KV / recurrent cache ------------------------------------------------------
+
+def cache_specs(cfg, batch: int, max_seq: int):
+    """Abstract cache layout per period position (stacked over repeats)."""
+    pattern = cfg.pattern
+    period = len(cfg.block_pattern) if cfg.block_pattern else 1
+    n_full = cfg.n_layers // period
+    w = cfg.lru_width or cfg.d_model
+
+    def one(kind, n=None):
+        lead = (n,) if n else ()
+        lax = ("layers",) if n else ()
+        if kind in ("attn",):
+            shape = lead + (batch, max_seq, cfg.n_kv_heads, cfg.hd)
+            return {"k": ParamSpec(shape, lax + ("batch", "kv_seq", "kv_heads", "head_dim"), "zeros"),
+                    "v": ParamSpec(shape, lax + ("batch", "kv_seq", "kv_heads", "head_dim"), "zeros")}
+        if kind == "attn_local":
+            W = min(cfg.window, max_seq)
+            shape = lead + (batch, W, cfg.n_kv_heads, cfg.hd)
+            return {"k": ParamSpec(shape, lax + ("batch", "kv_seq", "kv_heads", "head_dim"), "zeros"),
+                    "v": ParamSpec(shape, lax + ("batch", "kv_seq", "kv_heads", "head_dim"), "zeros"),
+                    "pos": ParamSpec(lead + (batch, W), lax + ("batch", None), "zeros")}
+        if kind == "rglru":
+            return {"h": ParamSpec(lead + (batch, w), lax + ("batch", "lru"), "zeros"),
+                    "conv": ParamSpec(lead + (batch, rglru.CONV_W - 1, w),
+                                      lax + ("batch", None, "lru"), "zeros")}
+        if kind == "rwkv":
+            H, N = cfg.n_heads, cfg.rnn_head_dim
+            return {"s": ParamSpec(lead + (batch, H, N, N), lax + ("batch", None, None, "rnn_state"), "zeros"),
+                    "tm": ParamSpec(lead + (batch, 1, cfg.d_model), lax + ("batch", None, "act_embed"), "zeros"),
+                    "cm": ParamSpec(lead + (batch, 1, cfg.d_model), lax + ("batch", None, "act_embed"), "zeros")}
+        raise ValueError(kind)
+
+    cache = {"blocks": {f"p{i}_{kind}": one(kind, n_full)
+                        for i, kind in enumerate(pattern[:period])} if n_full else {},
+             "tail": [one(kind) for kind in pattern[n_full * period:]],
+             "pos": ParamSpec((batch,), ("batch",), "zeros")}
+    return cache
+
+
+def cache_dtype(key: str, default):
+    """Leaf dtypes: ring-buffer position maps int32, rwkv state fp32."""
+    if key == "pos":
+        return jnp.int32
+    if key == "s":
+        return jnp.float32
+    return default
+
+
+def init_cache(cfg, batch, max_seq, dtype):
+    specs = cache_specs(cfg, batch, max_seq)
+
+    def mk(path, s):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        dt = cache_dtype(key, dtype)
+        fill = -1 if key == "pos" and len(s.shape) > 1 else 0
+        return jnp.full(s.shape, fill, dt)
+
+    cache = jax.tree_util.tree_map_with_path(
+        mk, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    cache["pos"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+# -- prefill / decode ----------------------------------------------------------
+
+def _prefill_block(cfg, kind, p, c, h, positions, sharder, prefix_len):
+    """Apply block over the full prompt and fill its cache slice."""
+    y = apply_norm(cfg, p["ln1"], h)
+    cd = h.dtype
+    if kind in ("attn", "attn_local"):
+        B, S, D = h.shape
+        q = jnp.einsum("bsd,dhk->bshk", y, p["attn"]["wq"].astype(cd))
+        k = jnp.einsum("bsd,dhk->bshk", y, p["attn"]["wk"].astype(cd))
+        v = jnp.einsum("bsd,dhk->bshk", y, p["attn"]["wv"].astype(cd))
+        if cfg.use_bias:
+            q = q + p["attn"]["bq"].astype(cd)
+            k = k + p["attn"]["bk"].astype(cd)
+            v = v + p["attn"]["bv"].astype(cd)
+        if cfg.qk_norm:
+            from .common import rmsnorm
+            q = rmsnorm(q, p["attn"]["q_norm"])
+            k = rmsnorm(k, p["attn"]["k_norm"])
+        if cfg.pos == "rope":
+            q = apply_rope(q, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+            k = apply_rope(k, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+        mode = "window" if kind == "attn_local" else "causal"
+        out = gqa_attend(q, k, v, mode=mode, q_pos=positions, k_pos=positions,
+                         prefix_len=prefix_len, window=cfg.window)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(cd))
+        if cfg.use_bias:
+            y = y + p["attn"]["bo"].astype(cd)
+        if kind == "attn":
+            c = dict(c, k=jax.lax.dynamic_update_slice_in_dim(c["k"], k.astype(c["k"].dtype), 0, 1),
+                     v=jax.lax.dynamic_update_slice_in_dim(c["v"], v.astype(c["v"].dtype), 0, 1))
+        else:
+            # ring-buffer layout: token at absolute position p lives in slot
+            # p % W (decode continues the same ring)
+            W = c["k"].shape[1]
+            last = min(S, W)
+            kw = k[:, -last:]
+            vw = v[:, -last:]
+            pw = positions[:, -last:]
+            b_idx = jnp.arange(B)[:, None]
+            slots = pw % W
+            kc = c["k"].at[b_idx, slots].set(kw.astype(c["k"].dtype))
+            vc = c["v"].at[b_idx, slots].set(vw.astype(c["v"].dtype))
+            pc = c["pos"].at[b_idx, slots].set(pw)
+            c = dict(c, k=kc, v=vc, pos=pc)
+    elif kind == "rglru":
+        y, (h_state, conv_state) = rglru.rglru_forward(
+            cfg, p["rec"], y, sharder, return_state=True)
+        c = dict(c, h=h_state.astype(jnp.float32), conv=conv_state)
+    elif kind == "rwkv":
+        y, (s_state, tm_prev) = rwkv6.rwkv_time_mix(cfg, p["time_mix"], y, sharder,
+                                                    return_state=True)
+        c = dict(c, s=s_state, tm=tm_prev)
+    h = h + y
+    y = apply_norm(cfg, p["ln2"], h)
+    if kind == "rwkv":
+        y, cm_prev = rwkv6.rwkv_channel_mix(cfg, p["time_mix"], y, return_state=True)
+        c = dict(c, cm=cm_prev)
+    elif cfg.moe is not None:
+        y, _ = moe_block(cfg, p["moe"], y, sharder)
+    else:
+        y = mlp(cfg, p["mlp"], y, sharder)
+    return h + y, c
+
+
+def prefill(cfg, params, tokens, cache, sharder, *, prefix_embeds=None):
+    """Run the prompt, fill caches, return last-position logits + cache."""
+    cd = cfg.cdtype()
+    h = params["embed"].astype(cd)[tokens]
+    if cfg.tie_embeddings:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, cd)
+    prefix_len = None
+    if prefix_embeds is not None:
+        pe = prefix_embeds.astype(cd)
+        if "vision_proj" in params:
+            pe = pe @ params["vision_proj"].astype(cd)
+        h = jnp.concatenate([pe, h], axis=1)
+        prefix_len = jnp.full((h.shape[0],), prefix_embeds.shape[1], jnp.int32)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.pos == "sinusoidal":
+        h = h + sinusoidal_pos(positions, cfg.d_model).astype(cd)
+    h = sharder.constraint(h, "batch", "seq", "act_embed")
+
+    pattern = cfg.pattern
+    period = len(cfg.block_pattern) if cfg.block_pattern else 1
+    n_full = cfg.n_layers // period
+
+    if n_full:
+        def scan_body(h, xs):
+            layer_params, layer_cache = xs
+            new_cache = {}
+            for i, kind in enumerate(pattern[:period]):
+                key = f"p{i}_{kind}"
+                h, new_cache[key] = _prefill_block(
+                    cfg, kind, layer_params[key], layer_cache[key], h,
+                    positions, sharder, prefix_len)
+            return h, new_cache
+
+        h, new_blocks = scan_or_unroll(scan_body, h,
+                                       (params["blocks"], cache["blocks"]),
+                                       unroll=not cfg.scan_layers)
+    else:
+        new_blocks = cache["blocks"]
+    new_tail = []
+    for p_t, c_t, kind in zip(params["tail"], cache["tail"], pattern[n_full * period:]):
+        h, c_new = _prefill_block(cfg, kind, p_t, c_t, h, positions, sharder, prefix_len)
+        new_tail.append(c_new)
+
+    h = apply_norm(cfg, params["final_norm"], h[:, -1:])
+    logits = _lm_logits(cfg, params, h, sharder)
+    new_cache = {"blocks": new_blocks, "tail": new_tail,
+                 "pos": jnp.full((B,), S, jnp.int32)}
+    return logits[:, 0], new_cache
+
+
+def _decode_block(cfg, kind, p, c, h, pos, sharder):
+    """One-token block step against the cache. h: (B, 1, D); pos: (B,)."""
+    cd = h.dtype
+    y = apply_norm(cfg, p["ln1"], h)
+    if kind in ("attn", "attn_local"):
+        q = jnp.einsum("bsd,dhk->bshk", y, p["attn"]["wq"].astype(cd))
+        k = jnp.einsum("bsd,dhk->bshk", y, p["attn"]["wk"].astype(cd))
+        v = jnp.einsum("bsd,dhk->bshk", y, p["attn"]["wv"].astype(cd))
+        if cfg.use_bias:
+            q = q + p["attn"]["bq"].astype(cd)
+            k = k + p["attn"]["bk"].astype(cd)
+            v = v + p["attn"]["bv"].astype(cd)
+        if cfg.qk_norm:
+            from .common import rmsnorm
+            q = rmsnorm(q, p["attn"]["q_norm"])
+            k = rmsnorm(k, p["attn"]["k_norm"])
+        if cfg.pos == "rope":
+            q = apply_rope(q, pos[:, None], fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+            k = apply_rope(k, pos[:, None], fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+        if kind == "attn":
+            # per-row scatter: continuous batching gives each row its own pos
+            b_idx = jnp.arange(q.shape[0])
+            kc = c["k"].at[b_idx, pos].set(k[:, 0].astype(c["k"].dtype))
+            vc = c["v"].at[b_idx, pos].set(v[:, 0].astype(c["v"].dtype))
+            out = decode_attend(q, kc, vc, pos + 1)
+            c = dict(c, k=kc, v=vc)
+        else:
+            W = c["k"].shape[1]
+            b_idx = jnp.arange(q.shape[0])
+            slot = (pos % W).astype(jnp.int32)
+            kc = c["k"].at[b_idx, slot].set(k[:, 0].astype(c["k"].dtype))
+            vc = c["v"].at[b_idx, slot].set(v[:, 0].astype(c["v"].dtype))
+            pc = c["pos"].at[b_idx, slot].set(pos)
+            # ring attention over the window
+            B = q.shape[0]
+            G = cfg.n_heads // cfg.n_kv_heads
+            qg = q.reshape(B, cfg.n_kv_heads, G, cfg.hd)
+            scores = jnp.einsum("bhgk,bshk->bhgs", qg, kc).astype(jnp.float32)
+            scores = scores / (cfg.hd ** 0.5)
+            ok = (pc >= 0) & (pc <= pos[:, None]) & (pc > pos[:, None] - W)
+            scores = jnp.where(ok[:, None, None], scores, -1e30)
+            w = jax.nn.softmax(scores, axis=-1).astype(cd)
+            out = jnp.einsum("bhgs,bshk->bhgk", w, vc).reshape(B, 1, cfg.n_heads, cfg.hd)
+            c = dict(c, k=kc, v=vc, pos=pc)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(cd))
+        if cfg.use_bias:
+            y = y + p["attn"]["bo"].astype(cd)
+    elif kind == "rglru":
+        y, (hs, conv) = rglru.rglru_decode(cfg, p["rec"], y, (c["h"], c["conv"]))
+        c = dict(c, h=hs.astype(jnp.float32), conv=conv.astype(c["conv"].dtype))
+    elif kind == "rwkv":
+        y, (s, tm) = rwkv6.rwkv_decode(cfg, p["time_mix"], y, (c["s"], c["tm"], None))
+        c = dict(c, s=s, tm=tm)
+    h = h + y
+    y = apply_norm(cfg, p["ln2"], h)
+    if kind == "rwkv":
+        y, cm = rwkv6.rwkv_channel_mix(cfg, p["time_mix"], y, shift_prev=c["cm"],
+                                       return_state=True)
+        c = dict(c, cm=cm)
+    elif cfg.moe is not None:
+        y, _ = moe_block(cfg, p["moe"], y, sharder)
+    else:
+        y = mlp(cfg, p["mlp"], y, sharder)
+    return h + y, c
+
+
+def decode_step(cfg, params, tokens, cache, sharder):
+    """tokens: (B, 1) -> (logits (B, V), new cache)."""
+    cd = cfg.cdtype()
+    pos = cache["pos"]
+    h = params["embed"].astype(cd)[tokens]
+    if cfg.tie_embeddings:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, cd)
+    if cfg.pos == "sinusoidal":
+        h = h + sinusoidal_pos(pos[:, None], cfg.d_model).astype(cd)
+    h = sharder.constraint(h, "batch", "seq", "act_embed")
+
+    pattern = cfg.pattern
+    period = len(cfg.block_pattern) if cfg.block_pattern else 1
+    n_full = cfg.n_layers // period
+
+    if n_full:
+        def scan_body(h, xs):
+            layer_params, layer_cache = xs
+            new_cache = {}
+            for i, kind in enumerate(pattern[:period]):
+                key = f"p{i}_{kind}"
+                h, new_cache[key] = _decode_block(
+                    cfg, kind, layer_params[key], layer_cache[key], h, pos, sharder)
+            return h, new_cache
+
+        h, new_blocks = scan_or_unroll(scan_body, h,
+                                       (params["blocks"], cache["blocks"]),
+                                       unroll=not cfg.scan_layers)
+    else:
+        new_blocks = cache["blocks"]
+    new_tail = []
+    for p_t, c_t, kind in zip(params["tail"], cache["tail"], pattern[n_full * period:]):
+        h, c_new = _decode_block(cfg, kind, p_t, c_t, h, pos, sharder)
+        new_tail.append(c_new)
+
+    h = apply_norm(cfg, params["final_norm"], h)
+    logits = _lm_logits(cfg, params, h, sharder)
+    new_cache = {"blocks": new_blocks, "tail": new_tail, "pos": pos + 1}
+    return logits[:, 0], new_cache

@@ -1,0 +1,122 @@
+"""Model facade: one uniform API over all 10 assigned architectures.
+
+    model = build_model(cfg)
+    specs  = model.param_specs()            # ParamSpec tree
+    params = model.init_params(key)         # concrete (smoke/training)
+    logits, aux = model.forward(params, batch, sharder)
+    cache  = model.init_cache(B, S)
+    logits, cache = model.prefill(params, batch, cache, sharder)
+    logits, cache = model.decode_step(params, tokens, cache, sharder)
+
+``batch`` is a dict: tokens (B, S) always; prefix (B, P, D) for vlm;
+frames (B, T, D) for audio (stub frontends per the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer, whisper
+from .common import ParamSpec, init_tree
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: object
+
+    # -- params ----------------------------------------------------------------
+    def param_specs(self):
+        if self.cfg.family == "audio":
+            return whisper.whisper_specs(self.cfg)
+        return transformer.lm_specs(self.cfg)
+
+    def init_params(self, key):
+        return init_tree(self.param_specs(), key, self.cfg.pdtype())
+
+    # -- training / prefill-style full pass -------------------------------------
+    def forward(self, params, batch, sharder):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return whisper.forward(cfg, params, batch["frames"], batch["tokens"], sharder)
+        return transformer.forward(cfg, params, batch["tokens"], sharder,
+                                   prefix_embeds=batch.get("prefix"))
+
+    # -- serving -----------------------------------------------------------------
+    def cache_specs(self, batch, max_seq):
+        if self.cfg.family == "audio":
+            return whisper.cache_specs(self.cfg, batch, max_seq)
+        if self.cfg.family == "vlm":
+            max_seq += self.cfg.n_prefix_tokens  # stream = image prefix + text
+        return transformer.cache_specs(self.cfg, batch, max_seq)
+
+    def init_cache(self, batch, max_seq, dtype=None):
+        dtype = dtype or self.cfg.cdtype()
+        if self.cfg.family == "audio":
+            return whisper.init_cache(self.cfg, batch, max_seq, dtype)
+        if self.cfg.family == "vlm":
+            max_seq += self.cfg.n_prefix_tokens
+        return transformer.init_cache(self.cfg, batch, max_seq, dtype)
+
+    def prefill(self, params, batch, cache, sharder):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return whisper.prefill(cfg, params, batch["frames"], batch["tokens"],
+                                   cache, sharder)
+        return transformer.prefill(cfg, params, batch["tokens"], cache, sharder,
+                                   prefix_embeds=batch.get("prefix"))
+
+    def decode_step(self, params, tokens, cache, sharder):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return whisper.decode_step(cfg, params, tokens, cache, sharder)
+        return transformer.decode_step(cfg, params, tokens, cache, sharder)
+
+    # -- input stand-ins -----------------------------------------------------------
+    def input_specs(self, shape, *, abstract=True, sharder=None, seed=0):
+        """Model inputs for a ShapeConfig: ShapeDtypeStructs (dry-run) or
+        concrete random arrays (smoke). Text seq_len is reduced by the stub
+        prefix length for vlm so the *stream* length matches the assignment."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        cd = cfg.cdtype()
+        out = {}
+        if cfg.family == "vlm":
+            P = cfg.n_prefix_tokens
+            text = max(S - P, 1)
+            out["tokens"] = ((B, text), jnp.int32, "tokens")
+            if shape.kind != "decode":
+                out["prefix"] = ((B, P, cfg.d_model), cd, "embeds")
+        elif cfg.family == "audio":
+            T = cfg.n_prefix_tokens
+            dec = S if shape.kind != "decode" else S
+            out["tokens"] = ((B, min(dec, S)), jnp.int32, "tokens")
+            if shape.kind != "decode":
+                out["frames"] = ((B, T, cfg.d_model), cd, "embeds")
+        else:
+            out["tokens"] = ((B, S), jnp.int32, "tokens")
+        if shape.kind == "train":
+            out["labels"] = (out["tokens"][0], jnp.int32, "tokens")
+
+        def mk(item, name):
+            shp, dt, kind = item
+            if abstract:
+                sh = None
+                if sharder is not None:
+                    axes = {"tokens": ("batch", "seq"),
+                            "embeds": ("batch", "seq", "act_embed")}[kind]
+                    axes = axes[: len(shp)]
+                    sh = sharder.sharding(shp, axes)
+                return jax.ShapeDtypeStruct(shp, dt, sharding=sh)
+            key = jax.random.PRNGKey(seed + hash(name) % 1000)
+            if dt == jnp.int32:
+                return jax.random.randint(key, shp, 0, cfg.vocab, dtype=jnp.int32)
+            return jax.random.normal(key, shp, dtype=dt)
+
+        return {k: mk(v, k) for k, v in out.items()}
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

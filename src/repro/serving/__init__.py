@@ -1,0 +1,4 @@
+"""Serving: prefill/decode step factories, scheduler, SepBIT KV page store."""
+from .engine import make_decode_fn, make_prefill_fn
+
+__all__ = ["make_prefill_fn", "make_decode_fn"]

@@ -1,0 +1,26 @@
+"""Serving step factories (prefill / decode) + a batched generation engine.
+
+``make_prefill_fn`` / ``make_decode_fn`` return pure functions for jit — the
+dry-run lowers exactly these. ``Engine`` wraps them with a continuous-batching
+scheduler and the SepBIT log-structured KV page store (serving/logkv.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_fn(model, cfg, sharder):
+    def prefill_fn(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache, sharder)
+        return logits, cache
+    return prefill_fn
+
+
+def make_decode_fn(model, cfg, sharder, *, sample: bool = False):
+    def decode_fn(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache, sharder)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, cache
+    return decode_fn

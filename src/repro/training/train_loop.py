@@ -1,0 +1,76 @@
+"""Train-step factory: microbatched grad accumulation + AdamW + sharding.
+
+``make_train_step`` returns a pure function
+    step_fn(state, batch) -> (state, metrics)
+suitable for jit with in/out shardings derived from the param spec tree.
+The microbatch loop is a `lax.scan` (compute/comm overlap: XLA overlaps each
+microbatch's reduce-scatter with the next microbatch's backward pass).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import AdamWConfig, adamw_update, global_norm, init_opt_state
+
+
+def cross_entropy(logits, labels, ignore_index: int = -1):
+    """Mean CE over non-ignored labels; fp32 logsumexp (vocab may be
+    model-sharded — GSPMD inserts the reduction collective)."""
+    logits = logits.astype(jnp.float32)
+    mask = labels != ignore_index
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def make_loss_fn(model, cfg, sharder):
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch, sharder)
+        labels = batch["labels"]
+        # vlm/audio: logits cover [prefix + text]; labels cover text only
+        logits = logits[:, -labels.shape[1]:]
+        ce = cross_entropy(logits, labels)
+        return ce + aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(model, cfg, sharder, opt_cfg: AdamWConfig):
+    loss_fn = make_loss_fn(model, cfg, sharder)
+    M = max(cfg.microbatches, 1)
+
+    def step_fn(state, batch):
+        params, opt = state["params"], state["opt"]
+
+        def micro(carry, mb):
+            gacc, lacc = carry
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb)
+            gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+            return (gacc, lacc + loss), parts["ce"]
+
+        if M > 1:
+            mbs = jax.tree.map(lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]),
+                               batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / M, gsum)
+            loss = lsum / M
+        else:
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        new_params, new_opt, om = adamw_update(opt_cfg, params, grads, opt)
+        metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return step_fn
+
+
+def init_train_state(model, cfg, opt_cfg: AdamWConfig, key):
+    params = model.init_params(key)
+    return {"params": params, "opt": init_opt_state(opt_cfg, params)}

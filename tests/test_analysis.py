@@ -1,0 +1,52 @@
+"""Closed-form Zipf analysis must reproduce the paper's Fig 8/10 numbers."""
+
+import numpy as np
+import pytest
+
+from repro.core.analysis import (BLOCKS_PER_GIB, fig8a_grid, pr_gc_bit,
+                                 pr_user_bit, trace_conditional_gc,
+                                 trace_conditional_user)
+from repro.core.traces import zipf_trace
+
+G = BLOCKS_PER_GIB
+
+
+def test_fig8a_min_771():
+    """Fig 8(a): lowest probability is 77.1% at (u0=0.25, v0=4) GiB."""
+    assert pr_user_bit(0.25 * G, 4 * G, alpha=1.0) == pytest.approx(0.771, abs=0.002)
+    grid = fig8a_grid()
+    assert min(grid.values()) == pytest.approx(0.771, abs=0.003)
+
+
+def test_fig8b_alpha_extremes():
+    """Fig 8(b): >=87.1% at alpha=1 (u0=1GiB); 9.5% at alpha=0."""
+    vals = [pr_user_bit(1 * G, v * G, alpha=1.0) for v in (0.25, 0.5, 1, 2, 4)]
+    assert min(vals) == pytest.approx(0.871, abs=0.003)
+    assert pr_user_bit(1 * G, 1 * G, alpha=0.0) == pytest.approx(0.095, abs=0.002)
+
+
+def test_fig10a_age_separation():
+    """Fig 10(a): r0=8GiB: 41.2% at g0=2GiB vs 14.9% at g0=32GiB."""
+    assert pr_gc_bit(2 * G, 8 * G, alpha=1.0) == pytest.approx(0.412, abs=0.003)
+    assert pr_gc_bit(32 * G, 8 * G, alpha=1.0) == pytest.approx(0.149, abs=0.003)
+
+
+def test_fig10b_skew_dependence():
+    """Fig 10(b): age separation 3.5pp at alpha=0.2; 26.4pp at alpha=1."""
+    d02 = pr_gc_bit(2 * G, 8 * G, alpha=0.2) - pr_gc_bit(32 * G, 8 * G, alpha=0.2)
+    d10 = pr_gc_bit(2 * G, 8 * G, alpha=1.0) - pr_gc_bit(32 * G, 8 * G, alpha=1.0)
+    assert d02 == pytest.approx(0.035, abs=0.004)
+    assert d10 == pytest.approx(0.264, abs=0.004)
+
+
+def test_trace_conditionals_monotone():
+    """Fig 9/11 empirical counterparts behave like the math: higher for
+    larger u0 windows; decreasing in g0."""
+    tr = zipf_trace(1 << 13, 6 << 13, alpha=1.0, seed=4)
+    n = 1 << 13
+    p1 = trace_conditional_user(tr, int(0.05 * n), int(0.4 * n))
+    p2 = trace_conditional_user(tr, int(0.4 * n), int(0.4 * n))
+    assert 0 < p1 < p2 <= 1
+    g1 = trace_conditional_gc(tr, int(0.05 * n), int(0.5 * n))
+    g2 = trace_conditional_gc(tr, int(2.0 * n), int(0.5 * n))
+    assert g1 > g2

@@ -1,0 +1,86 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("S", [17, 1024, 1500, 4096])
+@pytest.mark.parametrize("selector", ["greedy", "cost_benefit"])
+def test_segsel_sweep(S, selector):
+    n = RNG.integers(0, 129, S)
+    nv = np.minimum(RNG.integers(0, 129, S), n)
+    st = RNG.integers(0, 10_000, S)
+    state = RNG.integers(0, 3, S)
+    t = jnp.int32(20_000)
+    args = tuple(map(jnp.asarray, (n, nv, st, state)))
+    i1, s1 = ops.segment_select(*args, t, selector=selector)
+    i2, s2 = ref.segment_select_ref(*args, t, selector=selector)
+    if int(i2) == -1:
+        assert int(i1) == -1
+    else:
+        assert int(i1) == int(i2)
+        np.testing.assert_allclose(float(s1), float(s2), rtol=1e-5)
+
+
+def test_segsel_no_eligible():
+    z = jnp.zeros(64, jnp.int32)
+    i, s = ops.segment_select(z, z, z, z, jnp.int32(5))
+    assert int(i) == -1
+
+
+@pytest.mark.parametrize("B", [5, 1024, 2049])
+def test_classify_sweep(B):
+    v = RNG.integers(0, 10_000, B)
+    g = RNG.integers(0, 100_000, B)
+    c1 = RNG.integers(0, 2, B)
+    gc = RNG.integers(0, 2, B)
+    for ell in (float("inf"), 1234.5, 1.0):
+        o1 = ops.classify(*map(jnp.asarray, (v, g, c1, gc)), jnp.float32(ell))
+        o2 = ref.classify_ref(*map(jnp.asarray, (v, g, c1, gc)), jnp.float32(ell))
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+@pytest.mark.parametrize("n", [1000, 1 << 14])
+@pytest.mark.parametrize("alpha", [0.0, 1.0])
+def test_zipfprob_sweep(n, alpha):
+    from repro.core.traces import zipf_probs
+    p = jnp.asarray(zipf_probs(n, alpha), jnp.float32)
+    got = ops.zipf_bit_sums(p, 100.0, 400.0, 2000.0, 800.0)
+    want = ref.zipf_bit_sums_ref(p, 100.0, 400.0, 2000.0, 800.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,S", [
+    (1, 4, 1, 64, 300),      # MQA, ragged tile
+    (2, 8, 2, 64, 700),      # GQA
+    (2, 8, 8, 128, 512),     # MHA, aligned
+    (1, 16, 2, 128, 1024),   # large G
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(B, Hq, Hkv, D, S, dtype):
+    q = jnp.asarray(RNG.standard_normal((B, Hq, D)), dtype)
+    k = jnp.asarray(RNG.standard_normal((B, S, Hkv, D)), dtype)
+    v = jnp.asarray(RNG.standard_normal((B, S, Hkv, D)), dtype)
+    kl = jnp.asarray(RNG.integers(1, S + 1, B), jnp.int32)
+    o1 = ops.flash_decode(q, k, v, kl, kv_tile=256)
+    o2 = ref.flash_decode_ref(q, k, v, kl)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=tol, rtol=tol)
+
+
+def test_zipfprob_matches_closed_form():
+    """Kernel path reproduces the paper's Fig 8 math (small n for speed)."""
+    from repro.core.analysis import pr_user_bit
+    from repro.core.traces import zipf_probs
+    n = 1 << 15
+    p = jnp.asarray(zipf_probs(n, 1.0), jnp.float32)
+    got = float(ops.pr_user_bit_kernel(p, 500.0, 2000.0))
+    want = pr_user_bit(500, 2000, n=n, alpha=1.0)
+    assert got == pytest.approx(want, abs=2e-3)

@@ -1,0 +1,99 @@
+"""Unit tests for Algorithm 1 and the baseline placement schemes."""
+
+import numpy as np
+import pytest
+
+from repro.core.blockstore import INF, Segment, Volume
+from repro.core.placement import SCHEMES, make_placement
+from repro.core.simulator import annotate_next_write, simulate
+from repro.core.traces import zipf_trace
+
+
+def test_class_budgets():
+    """§4.1 class budgets: NoSep 1; SepGC 2; ETI 3; others 6."""
+    expect = {"nosep": 1, "sepgc": 2, "eti": 3, "uw": 3, "gw": 4,
+              "sepbit": 6, "fk": 6, "dac": 6, "sfs": 6, "ml": 6,
+              "mq": 6, "sfr": 6, "fadac": 6, "warcip": 6}
+    for name, n in expect.items():
+        assert SCHEMES[name].n_classes == n, name
+
+
+def test_sepbit_user_classes():
+    """UserWrite: v < ell -> Class 1 (idx 0); else Class 2 (idx 1);
+    new writes (v = INF) go long-lived once ell is finite."""
+    p = make_placement("sepbit", 128, 16)
+    vol = Volume(128, 16, 6)
+    # ell = +inf initially: everything is short-lived
+    assert p.on_user_write(vol, 1, 5) == 0
+    assert p.on_user_write(vol, 1, INF) == 0
+    p.ell = 100.0
+    assert p.on_user_write(vol, 1, 99) == 0
+    assert p.on_user_write(vol, 1, 100) == 1
+    assert p.on_user_write(vol, 1, INF) == 1
+
+
+def test_sepbit_gc_classes():
+    """GCWrite: Class-1 victims -> 3; others split by age at 4l/16l."""
+    p = make_placement("sepbit", 128, 16)
+    p.ell = 10.0
+    vol = Volume(128, 16, 6)
+    vol.t = 1000
+    seg_c1 = Segment(0, 0, 16, 0)
+    seg_c2 = Segment(1, 1, 16, 0)
+    lbas = np.array([1, 2, 3])
+    utimes = np.array([vol.t - 5, vol.t - 50, vol.t - 500])  # ages 5, 50, 500
+    out = p.gc_write_classes(vol, seg_c1, lbas, utimes, np.zeros(3, bool))
+    assert (out == 2).all()   # from Class 1 -> Class 3 (idx 2)
+    out = p.gc_write_classes(vol, seg_c2, lbas, utimes, np.zeros(3, bool))
+    assert out.tolist() == [3, 4, 5]  # [0,4l) [4l,16l) [16l,inf)
+
+
+def test_sepbit_ell_update():
+    """Algorithm 1 lines 4-9: ell = mean creation-age of the last 16
+    reclaimed Class-1 segments."""
+    p = make_placement("sepbit", 128, 16, nc_window=4)
+    vol = Volume(128, 16, 6)
+    vol.t = 100
+    for ct in (10, 20, 30, 40):   # lifespans 90, 80, 70, 60
+        seg = Segment(0, 0, 16, ct)
+        p.on_gc_segment(vol, seg)
+    assert p.ell == pytest.approx((90 + 80 + 70 + 60) / 4)
+
+
+def test_fk_classes_by_remaining_life():
+    p = make_placement("fk", 128, 16)
+    vol = Volume(128, 16, 6)
+    vol.t = 0
+    p.note_user_write(5, 10)      # dies at t=10: remaining 10 -> ceil(10/16)=1st seg
+    assert p.on_user_write(vol, 5, 0) == 0
+    p.note_user_write(6, 16 * 3)  # remaining 48 -> 3rd open segment (idx 2)
+    assert p.on_user_write(vol, 6, 0) == 2
+    p.note_user_write(7, INF)     # never dies -> last class
+    assert p.on_user_write(vol, 7, 0) == 5
+
+
+def test_annotate_next_write():
+    tr = np.array([3, 1, 3, 2, 1])
+    nxt = annotate_next_write(tr, 4)
+    assert nxt[0] == 2 and nxt[1] == 4
+    assert nxt[2] >= INF // 2 and nxt[3] >= INF // 2 and nxt[4] >= INF // 2
+
+
+def test_dac_promote_demote():
+    p = make_placement("dac", 64, 16)
+    vol = Volume(64, 16, 6)
+    c1 = p.on_user_write(vol, 3, 5)
+    c2 = p.on_user_write(vol, 3, 5)
+    assert c2 <= c1  # promotion -> hotter class (lower index)
+    seg = Segment(0, 0, 16, 0)
+    out = p.gc_write_classes(vol, seg, np.array([3]), np.array([0]), np.zeros(1, bool))
+    assert out[0] >= c2  # demotion on GC
+
+
+def test_all_schemes_run():
+    tr = zipf_trace(1 << 10, 4 << 10, alpha=1.0, seed=0)
+    for name in SCHEMES:
+        r = simulate(tr, name, segment_size=32)
+        assert r.wa >= 1.0, name
+        assert sum(r.class_user_writes) == r.user_writes, name
+        assert sum(r.class_gc_writes) == r.gc_writes, name

@@ -1,0 +1,87 @@
+"""End-to-end behaviour: the paper's headline claims on the synthetic pool."""
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import simulate
+from repro.core.traces import mixed_trace, sequential_trace, zipf_trace
+from repro.core.volumes import overall_wa
+
+
+N = 1 << 12
+SEG = 64
+
+
+def run(scheme, tr, sel="cost_benefit", **kw):
+    return simulate(tr, scheme, segment_size=SEG, selector=sel, **kw)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return [
+        mixed_trace(N, 6 * N, seed=1, burst_echo_prob=0.4),
+        mixed_trace(N, 6 * N, seed=2, frac_static=0.3, rotate_share=0.4),
+        zipf_trace(N, 6 * N, alpha=1.0, seed=3),
+    ]
+
+
+def test_separation_hierarchy(pool):
+    """Paper Exp#1/#4 ordering: SepBIT < UW/GW < SepGC < NoSep overall."""
+    wa = {s: overall_wa([run(s, tr) for tr in pool])
+          for s in ("nosep", "sepgc", "uw", "gw", "sepbit")}
+    assert wa["sepbit"] < wa["uw"] < wa["sepgc"] < wa["nosep"]
+    assert wa["sepbit"] < wa["gw"] < wa["nosep"]
+
+
+def test_sepbit_beats_most_temperature_schemes(pool):
+    """Paper Exp#1: SepBIT below the temperature-scheme field. On synthetic
+    stationary-skew volumes the strongest ladder schemes can tie within ~2%
+    (their best case — see EXPERIMENTS.md §Paper-validation), so the claim
+    is: strictly better than >=5 of 6, and never worse than best-of-field
+    by more than 2%."""
+    schemes = ("sfs", "eti", "mq", "sfr", "fadac", "warcip")
+    wa = {s: overall_wa([run(s, tr) for tr in pool])
+          for s in ("sepbit",) + schemes}
+    beaten = sum(wa["sepbit"] < wa[s] for s in schemes)
+    assert beaten >= 5, wa
+    assert wa["sepbit"] <= min(wa[s] for s in schemes) * 1.02, wa
+
+
+def test_fk_best_under_greedy(pool):
+    """Future knowledge is the bound (Exp#1, Greedy)."""
+    fk = overall_wa([run("fk", tr, sel="greedy") for tr in pool])
+    for s in ("sepbit", "sepgc", "nosep", "dac"):
+        assert fk <= overall_wa([run(s, tr, sel="greedy") for tr in pool])
+
+
+def test_sequential_near_one():
+    """Sequential overwrite: every scheme should approach WA ~ 1."""
+    tr = sequential_trace(N, 4)
+    for s in ("nosep", "sepbit", "fk"):
+        assert run(s, tr).wa < 1.15, s
+
+
+def test_gp_threshold_monotone():
+    """Exp#3: larger GP threshold => lower WA."""
+    tr = zipf_trace(N, 6 * N, alpha=1.0, seed=5)
+    was = [run("sepbit", tr, gp_threshold=g).wa for g in (0.10, 0.15, 0.25)]
+    assert was[0] >= was[1] >= was[2]
+
+
+def test_segment_size_monotone():
+    """Exp#2: smaller segments (same GC batch bytes) => lower WA."""
+    tr = mixed_trace(N, 6 * N, seed=7, burst_echo_prob=0.4)
+    wa_small = simulate(tr, "sepbit", segment_size=32, gc_batch_segments=4,
+                        selector="cost_benefit").wa
+    wa_big = simulate(tr, "sepbit", segment_size=128, gc_batch_segments=1,
+                      selector="cost_benefit").wa
+    assert wa_small <= wa_big * 1.02
+
+
+def test_conservation():
+    """No lost blocks: after replay, every written LBA was seen and WA >= 1."""
+    tr = zipf_trace(N, 4 * N, alpha=1.0, seed=9)
+    r = simulate(tr, "sepbit", segment_size=SEG)
+    assert r.wss_unique_lbas == N
+    assert r.user_writes == len(tr)
+    assert r.wa >= 1.0
