@@ -10,6 +10,7 @@ Run:  PYTHONPATH=src python -m benchmarks.run [--full] [--only exp1,...]
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
 import time
@@ -227,6 +228,52 @@ def jaxsim_throughput(full=False):
     _row("jaxsim/sepbit_cb", us, f"writes_per_s={1e6*len(tr)/us:.0f};WA={r['wa']:.3f}")
 
 
+def fleet(full=False, n_volumes=None, kind="mixed"):
+    """Fleet-scale batched replay: one vmapped XLA program over V volumes vs
+    a Python loop of single-volume jaxsim runs.
+
+    The fleet is heterogeneous (per-volume trace lengths differ, as in the
+    paper's 186-volume corpus), which is exactly where batching wins: the
+    padded fleet program compiles *once*, while the naive loop re-traces and
+    re-compiles the scan for every distinct trace length. The headline
+    ``cold`` rows therefore time the end-to-end evaluation including
+    compilation for both sides (caches cleared first); ``steady`` rows show
+    the recompile-free repeat throughput for transparency.
+    """
+    import jax
+    import numpy as np
+    from repro.core.jaxsim import JaxSimConfig, pad_fleet, simulate_fleet, simulate_jax
+    from repro.core.tracegen import make_fleet
+    V = n_volumes or (32 if full else 16)
+    n = 512 if full else 256
+    traces = make_fleet(kind, V, n, 3 * n, jitter=0.25, seed=9)
+    cfg = JaxSimConfig(n_lbas=n, segment_size=32, scheme="sepbit")
+    padded = pad_fleet(traces)
+    n_lens = len({len(t) for t in traces})
+
+    jax.clear_caches()
+    us_f, rf = _timed(lambda: simulate_fleet(padded, cfg))   # 1 compile, V replays
+    us_f2, _ = _timed(lambda: simulate_fleet(padded, cfg))
+    jax.clear_caches()
+    us_l, rl = _timed(lambda: [simulate_jax(t, cfg) for t in traces])
+    us_l2, _ = _timed(lambda: [simulate_jax(t, cfg) for t in traces])
+
+    wa = np.asarray(rf["fleet"]["per_volume_wa"])
+    _row(f"fleet/{kind}/cold_vmap_v{V}", us_f,
+         f"volumes_per_s={1e6 * V / us_f:.2f};WA={rf['fleet']['wa']:.4f}")
+    _row(f"fleet/{kind}/cold_loop_v{V}", us_l,
+         f"volumes_per_s={1e6 * V / us_l:.2f};distinct_lengths={n_lens}")
+    _row(f"fleet/{kind}/cold_speedup", 0, f"x={us_l / us_f:.2f}")
+    _row(f"fleet/{kind}/steady_vmap_v{V}", us_f2,
+         f"volumes_per_s={1e6 * V / us_f2:.2f}")
+    _row(f"fleet/{kind}/steady_loop_v{V}", us_l2,
+         f"volumes_per_s={1e6 * V / us_l2:.2f}")
+    _row(f"fleet/{kind}/per_volume_wa", 0,
+         f"median={np.median(wa):.4f};min={wa.min():.4f};max={wa.max():.4f}")
+    mism = sum(rf["volumes"][i]["gc_writes"] != rl[i]["gc_writes"] for i in range(V))
+    _row(f"fleet/{kind}/parity_mismatches", 0, str(mism))
+
+
 def kernels(full=False):
     """Pallas kernel interpret-mode validation timings."""
     import jax.numpy as jnp
@@ -269,7 +316,8 @@ BENCHES = {
     "exp4": exp4_breakdown, "exp5": exp5_memory,
     "fig8": fig8_user_bit, "fig10": fig10_gc_bit, "fig9_11": fig9_11_trace,
     "obs": obs_trace_analysis, "kv_wa": kv_wa, "ckpt_wa": ckpt_wa,
-    "jaxsim": jaxsim_throughput, "kernels": kernels, "roofline": roofline,
+    "jaxsim": jaxsim_throughput, "fleet": fleet, "kernels": kernels,
+    "roofline": roofline,
 }
 
 
@@ -277,11 +325,26 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="benchmark-grade sizes")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument("--mode", default=None, choices=[None, "paper", "fleet"],
+                    help="fleet = batched multi-volume replay benchmark only; "
+                         "paper = every bench except fleet")
+    ap.add_argument("--volumes", type=int, default=None,
+                    help="fleet mode: number of volumes")
+    ap.add_argument("--workload", default="mixed",
+                    help="fleet mode: mixed|zipf_mixture|shifting_hotspot|msr_burst")
     args, _ = ap.parse_known_args()
-    names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
+    benches = dict(BENCHES)  # bind fleet flags once, wherever it's dispatched
+    benches["fleet"] = functools.partial(fleet, n_volumes=args.volumes,
+                                         kind=args.workload)
+    if args.mode == "fleet":
+        benches["fleet"](full=args.full)
+        return
+    names = args.only.split(",") if args.only else list(benches)
+    if args.mode == "paper" and not args.only:
+        names = [n for n in names if n != "fleet"]
     for name in names:
-        BENCHES[name](full=args.full)
+        benches[name](full=args.full)
 
 
 if __name__ == "__main__":

@@ -138,8 +138,17 @@ class Volume:
         return seg
 
     def release(self, seg: Segment) -> None:
-        """Reclaim a fully-processed GC victim segment."""
+        """Reclaim a fully-processed GC victim segment.
+
+        The single release path (the simulator and any future caller go
+        through here): drops the victim's occupied *and* still-valid slot
+        counts — live blocks are expected to have been re-appended already,
+        which re-added them to ``total_valid`` — and removes it from the
+        sealed list (victims are always sealed; releasing anything else
+        raises, catching caller bugs at the fault site).
+        """
         self.total_occupied -= seg.n
+        self.total_valid -= seg.n_valid
         self.sealed.remove(seg)
         del self.segments[seg.sid]
         self.segments_reclaimed += 1

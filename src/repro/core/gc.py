@@ -68,12 +68,16 @@ class GCPolicy:
         st = np.fromiter((s.seal_time for s in sealed), dtype=np.float64, count=len(sealed))
         ct = np.fromiter((s.creation_time for s in sealed), dtype=np.float64, count=len(sealed))
         scores = self._score(n, nv, st, ct, vol.t)
+        # Mask ineligible segments *before* ranking (mirrors jaxsim._scores and
+        # the segsel kernel): a zero-garbage victim cannot reduce GP, and with
+        # gc_batch_segments > 1 letting one into the top-k used to crowd out
+        # eligible segments — the post-filter could then return [] and stall GC
+        # even though garbage-bearing victims existed.
+        eligible = (n - nv > 0) | (nv == 0)
+        scores = np.where(eligible, scores, -np.inf)
         if k == 1:
             idx = [int(np.argmax(scores))]
         else:
             k = min(k, len(sealed))
             idx = list(np.argsort(-scores)[:k])
-        victims = [sealed[i] for i in idx]
-        # Refuse victims with zero garbage: rewriting them cannot reduce GP.
-        victims = [s for s in victims if s.garbage > 0 or s.n_valid == 0]
-        return victims
+        return [sealed[i] for i in idx if np.isfinite(scores[i])]

@@ -43,16 +43,25 @@ class SimResult:
 
 def annotate_next_write(trace: np.ndarray, n_lbas: int) -> np.ndarray:
     """For each request i, the index of the next write to the same LBA
-    (INF if none) — the block's BIT, used by FK."""
+    (INF if none) — the block's BIT, used by FK.
+
+    Grouped-argsort formulation: a stable sort by LBA lines up each LBA's
+    writes in time order, so every request's successor is simply the next
+    entry of the same group. O(m log m) vectorized, replacing the reversed
+    Python loop that cost O(m) interpreter time on every FK run.
+
+    ``n_lbas`` is kept for signature compatibility; the argsort formulation
+    needs no per-LBA table and does not bound or validate LBA values.
+    """
+    trace = np.asarray(trace)
     m = len(trace)
     nxt = np.full(m, INF, dtype=np.int64)
-    last_seen = np.full(n_lbas, -1, dtype=np.int64)
-    for i in range(m - 1, -1, -1):
-        lba = trace[i]
-        j = last_seen[lba]
-        if j >= 0:
-            nxt[i] = j
-        last_seen[lba] = i
+    if m == 0:
+        return nxt
+    order = np.argsort(trace, kind="stable")
+    sorted_lba = trace[order]
+    same = sorted_lba[:-1] == sorted_lba[1:]
+    nxt[order[:-1][same]] = order[1:][same]
     return nxt
 
 
@@ -91,7 +100,6 @@ def run_gc_once(vol: Volume, placement: Placement, gc: GCPolicy,
         return -1
     rewritten = 0
     for seg in victims:
-        vol.sealed.remove(seg)
         placement.on_gc_segment(vol, seg)
         lbas, utimes, from_gc = seg.live_blocks()
         if len(lbas):
@@ -101,11 +109,7 @@ def run_gc_once(vol: Volume, placement: Placement, gc: GCPolicy,
                 _bulk_gc_append(vol, int(cls), lbas[sel], utimes[sel])
                 class_gc_writes[int(cls)] += int(np.count_nonzero(sel))
             rewritten += len(lbas)
-        # release victim: old copies (live ones were re-appended) vanish
-        vol.total_occupied -= seg.n
-        vol.total_valid -= seg.n_valid
-        del vol.segments[seg.sid]
-        vol.segments_reclaimed += 1
+        vol.release(seg)  # old copies (live ones were re-appended) vanish
     return rewritten
 
 

@@ -41,13 +41,15 @@ def _score_tile(n, nv, stime, state, t, selector):
 
 
 def _segsel_kernel(t_ref, n_ref, nv_ref, stime_ref, state_ref,
-                   out_ref, *, selector):
+                   score_ref, idx_ref, *, selector):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
-        out_ref[0, 0] = -jnp.inf   # running max score
-        out_ref[0, 1] = -1.0       # running argmax (flat index, as float)
+        score_ref[0, 0] = -jnp.inf   # running max score
+        idx_ref[0, 0] = -1           # running argmax (flat index, exact int32:
+        #                              a float32 carry would round indices
+        #                              above 2^24 to a neighboring segment)
 
     t = t_ref[0, 0]
     score = _score_tile(n_ref[...], nv_ref[...], stime_ref[...], state_ref[...],
@@ -60,10 +62,10 @@ def _segsel_kernel(t_ref, n_ref, nv_ref, stime_ref, state_ref,
     local_max = jnp.max(score)
     local_arg = jnp.min(jnp.where(score >= local_max, flat, jnp.int32(2 ** 30)))
 
-    best = out_ref[0, 0]
+    best = score_ref[0, 0]
     take = local_max > best
-    out_ref[0, 0] = jnp.where(take, local_max, best)
-    out_ref[0, 1] = jnp.where(take, local_arg.astype(jnp.float32), out_ref[0, 1])
+    score_ref[0, 0] = jnp.where(take, local_max, best)
+    idx_ref[0, 0] = jnp.where(take, local_arg, idx_ref[0, 0])
 
 
 @functools.partial(jax.jit, static_argnames=("selector", "interpret"))
@@ -84,7 +86,7 @@ def segment_select(seg_n: jax.Array, seg_nvalid: jax.Array, seg_stime: jax.Array
 
     n2, nv2, st2, state2 = map(prep, (seg_n, seg_nvalid, seg_stime, seg_state))
 
-    out = pl.pallas_call(
+    out_score, out_idx = pl.pallas_call(
         functools.partial(_segsel_kernel, selector=selector),
         grid=(Sp // tile,),
         in_specs=[
@@ -94,10 +96,12 @@ def segment_select(seg_n: jax.Array, seg_nvalid: jax.Array, seg_stime: jax.Array
             pl.BlockSpec((TILE_ROWS, LANE), lambda i: (i, 0)),
             pl.BlockSpec((TILE_ROWS, LANE), lambda i: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 2), lambda i: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        out_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)],
         interpret=interpret,
     )(t.reshape(1, 1).astype(jnp.int32), n2, nv2, st2, state2)
-    score = out[0, 0]
-    idx = out[0, 1].astype(jnp.int32)
+    score = out_score[0, 0]
+    idx = out_idx[0, 0]
     return jnp.where(jnp.isfinite(score), idx, -1), score

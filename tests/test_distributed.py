@@ -103,6 +103,7 @@ def test_compressed_allreduce_matches_psum():
         np.testing.assert_allclose(np.asarray(y + res), np.asarray(x), atol=1e-6)
 
 
+@pytest.mark.slow
 def test_pipeline_matches_sequential():
     """GPipe pipeline over a host mesh == sequential block stack."""
     devs = jax.devices()

@@ -11,6 +11,8 @@ from repro.distributed import null_sharder
 from repro.models import build_model
 from repro.training import AdamWConfig, init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow  # whole-zoo sweep dominates suite wall time
+
 
 def _batch(cfg, B, S, key=1, train=False):
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(key), (B, S), 0, cfg.vocab)}

@@ -1,7 +1,13 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Skipped wholesale (not failed) when ``hypothesis`` is absent — the seed
+container does not ship it; ``requirements-dev.txt`` installs it for CI.
+"""
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.blockstore import INF, Volume

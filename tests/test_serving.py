@@ -60,6 +60,7 @@ def test_preemption_recovers_from_pool_exhaustion():
     assert out["preemptions"] >= 0
 
 
+@pytest.mark.slow
 def test_engine_decode_consistency():
     """Batched greedy decode through the engine fns matches argmax of the
     teacher-forced forward."""
