@@ -274,6 +274,46 @@ def fleet(full=False, n_volumes=None, kind="mixed"):
     _row(f"fleet/{kind}/parity_mismatches", 0, str(mism))
 
 
+def sweep(full=False, n_volumes=None, kind="mixed", schemes=None,
+          selectors=None, gp_grid=None, use_kernels=False):
+    """Heterogeneous-config fleet sweep: one compiled program replays a
+    (scheme × selector × gp_threshold) policy grid, every volume running its
+    own placement policy via traced per-volume knobs, sharded over devices
+    when more than one is visible. Each grid cell replays the same tiled
+    workloads, so per-cell WA rows compare policies on equal traffic."""
+    from repro.core.fleetshard import simulate_fleet_sweep
+    from repro.core.jaxsim import JaxSimConfig
+    from repro.core.tracegen import tiled_fleet
+    schemes = schemes or ["nosep", "sepgc", "sepbit"]
+    selectors = selectors or ["greedy", "cost_benefit"]
+    gp_grid = gp_grid or [0.10, 0.15, 0.20]
+    n_cells = len(schemes) * len(selectors) * len(gp_grid)
+    V = n_volumes or (n_cells * (8 if full else 4))
+    per_cell = max(V // n_cells, 1)
+    V = per_cell * n_cells
+    n = 256 if full else 128
+    traces = tiled_fleet(kind, n_cells, per_cell, n, 3 * n, jitter=0.25, seed=17)
+    cfg = JaxSimConfig(n_lbas=n, segment_size=32, use_kernels=use_kernels)
+    us, res = _timed(lambda: simulate_fleet_sweep(
+        traces, cfg, schemes=schemes, selectors=selectors, gp_thresholds=gp_grid))
+    f = res["fleet"]
+    _row(f"sweep/{kind}/fleet_v{V}", us,
+         f"volumes_per_s={1e6 * V / us:.2f};cells={n_cells};"
+         f"devices={f['n_devices']};WA={f['wa']:.4f};"
+         f"free_exhausted={f['free_exhausted']}")
+    for row in res["sweep"]:
+        _row(f"sweep/{row['scheme']}/{row['selector']}/"
+             f"gp{int(round(100 * row['gp_threshold']))}", 0,
+             f"WA={row['wa']:.4f};median={row['median_wa']:.4f};"
+             f"n={row['n_volumes']}")
+    best = min(res["sweep"], key=lambda r: r["wa"])
+    worst = max(res["sweep"], key=lambda r: r["wa"])
+    _row(f"sweep/{kind}/best_cell", 0,
+         f"{best['scheme']}/{best['selector']}/gp{best['gp_threshold']:.2f};"
+         f"WA={best['wa']:.4f};reduction_vs_worst="
+         f"{100 * (1 - best['wa'] / worst['wa']):.1f}%")
+
+
 def kernels(full=False):
     """Pallas kernel interpret-mode validation timings."""
     import jax.numpy as jnp
@@ -316,8 +356,8 @@ BENCHES = {
     "exp4": exp4_breakdown, "exp5": exp5_memory,
     "fig8": fig8_user_bit, "fig10": fig10_gc_bit, "fig9_11": fig9_11_trace,
     "obs": obs_trace_analysis, "kv_wa": kv_wa, "ckpt_wa": ckpt_wa,
-    "jaxsim": jaxsim_throughput, "fleet": fleet, "kernels": kernels,
-    "roofline": roofline,
+    "jaxsim": jaxsim_throughput, "fleet": fleet, "sweep": sweep,
+    "kernels": kernels, "roofline": roofline,
 }
 
 
@@ -325,24 +365,40 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="benchmark-grade sizes")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
-    ap.add_argument("--mode", default=None, choices=[None, "paper", "fleet"],
+    ap.add_argument("--mode", default=None,
+                    choices=[None, "paper", "fleet", "sweep"],
                     help="fleet = batched multi-volume replay benchmark only; "
-                         "paper = every bench except fleet")
+                         "sweep = heterogeneous policy-grid sweep only; "
+                         "paper = every bench except fleet/sweep")
     ap.add_argument("--volumes", type=int, default=None,
-                    help="fleet mode: number of volumes")
+                    help="fleet/sweep mode: number of volumes")
     ap.add_argument("--workload", default="mixed",
-                    help="fleet mode: mixed|zipf_mixture|shifting_hotspot|msr_burst")
+                    help="fleet/sweep mode: mixed|zipf_mixture|shifting_hotspot|msr_burst")
+    ap.add_argument("--schemes", default=None,
+                    help="sweep mode: comma-separated schemes (default nosep,sepgc,sepbit)")
+    ap.add_argument("--selectors", default=None,
+                    help="sweep mode: comma-separated selectors")
+    ap.add_argument("--gp-grid", default=None,
+                    help="sweep mode: comma-separated GP thresholds (default 0.10,0.15,0.20)")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="sweep mode: route hot paths through the Pallas kernels")
     args, _ = ap.parse_known_args()
     print("name,us_per_call,derived")
     benches = dict(BENCHES)  # bind fleet flags once, wherever it's dispatched
     benches["fleet"] = functools.partial(fleet, n_volumes=args.volumes,
                                          kind=args.workload)
-    if args.mode == "fleet":
-        benches["fleet"](full=args.full)
+    benches["sweep"] = functools.partial(
+        sweep, n_volumes=args.volumes, kind=args.workload,
+        schemes=args.schemes.split(",") if args.schemes else None,
+        selectors=args.selectors.split(",") if args.selectors else None,
+        gp_grid=[float(x) for x in args.gp_grid.split(",")] if args.gp_grid else None,
+        use_kernels=args.use_kernels)
+    if args.mode in ("fleet", "sweep"):
+        benches[args.mode](full=args.full)
         return
     names = args.only.split(",") if args.only else list(benches)
     if args.mode == "paper" and not args.only:
-        names = [n for n in names if n != "fleet"]
+        names = [n for n in names if n not in ("fleet", "sweep")]
     for name in names:
         benches[name](full=args.full)
 

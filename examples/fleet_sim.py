@@ -5,6 +5,14 @@ program and prints per-volume + aggregate WA:
 
     PYTHONPATH=src python examples/fleet_sim.py --volumes 16 --workload mixed \
         [--scheme sepbit] [--selector cost_benefit] [--use-kernels]
+
+``--sweep`` switches to a heterogeneous-config policy sweep: every volume
+runs its own (scheme, selector, gp_threshold) cell of a policy grid — one
+compiled program, sharded over devices when more than one is visible:
+
+    PYTHONPATH=src python examples/fleet_sim.py --sweep --volumes 72 \
+        [--schemes nosep,sepgc,sepbit] [--selectors greedy,cost_benefit] \
+        [--gp-grid 0.10,0.15,0.20]
 """
 
 import argparse
@@ -12,8 +20,42 @@ import time
 
 import numpy as np
 
+from repro.core.fleetshard import simulate_fleet_sweep
 from repro.core.jaxsim import JaxSimConfig, pad_fleet, simulate_fleet
-from repro.core.tracegen import FLEET_GENERATORS, make_fleet
+from repro.core.tracegen import FLEET_GENERATORS, make_fleet, tiled_fleet
+
+
+def run_sweep(args) -> None:
+    schemes = args.schemes.split(",")
+    selectors = args.selectors.split(",")
+    gp_grid = [float(x) for x in args.gp_grid.split(",")]
+    n_cells = len(schemes) * len(selectors) * len(gp_grid)
+    per_cell = max(args.volumes // n_cells, 1)
+    n_updates = int(args.traffic * args.n_lbas)
+    traces = tiled_fleet(args.workload, n_cells, per_cell, args.n_lbas,
+                         n_updates, jitter=args.jitter, seed=args.seed)
+    cfg = JaxSimConfig(n_lbas=args.n_lbas, segment_size=args.segment,
+                       use_kernels=args.use_kernels)
+    print(f"sweep: {n_cells} policy cells × {per_cell} volumes "
+          f"({len(traces)} total), workload={args.workload}")
+
+    t0 = time.perf_counter()
+    res = simulate_fleet_sweep(traces, cfg, schemes=schemes,
+                               selectors=selectors, gp_thresholds=gp_grid)
+    dt = time.perf_counter() - t0
+
+    print(f"\n{'scheme':>8s} {'selector':>14s} {'gp':>5s} {'vols':>5s} "
+          f"{'WA':>8s} {'medianWA':>9s}")
+    for row in res["sweep"]:
+        print(f"{row['scheme']:>8s} {row['selector']:>14s} "
+              f"{row['gp_threshold']:5.2f} {row['n_volumes']:5d} "
+              f"{row['wa']:8.4f} {row['median_wa']:9.4f}")
+    best = min(res["sweep"], key=lambda r: r["wa"])
+    f = res["fleet"]
+    print(f"\nbest cell: {best['scheme']}/{best['selector']}"
+          f"/gp={best['gp_threshold']:.2f} (WA={best['wa']:.4f})")
+    print(f"{f['n_volumes'] / dt:.2f} volumes/s (incl. compile) on "
+          f"{f['n_devices']} device(s), free_exhausted={f['free_exhausted']}")
 
 
 def main():
@@ -34,7 +76,20 @@ def main():
     ap.add_argument("--use-kernels", action="store_true",
                     help="route victim selection + classification through the "
                          "Pallas kernels (interpret mode on CPU)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="heterogeneous policy-grid sweep (one program, every "
+                         "volume its own scheme/selector/gp)")
+    ap.add_argument("--schemes", default="nosep,sepgc,sepbit",
+                    help="sweep: comma-separated schemes")
+    ap.add_argument("--selectors", default="greedy,cost_benefit",
+                    help="sweep: comma-separated selectors")
+    ap.add_argument("--gp-grid", default="0.10,0.15,0.20",
+                    help="sweep: comma-separated GP thresholds")
     args = ap.parse_args()
+
+    if args.sweep:
+        run_sweep(args)
+        return
 
     traces = make_fleet(args.workload, args.volumes, args.n_lbas,
                         int(args.traffic * args.n_lbas), jitter=args.jitter,

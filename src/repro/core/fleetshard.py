@@ -1,0 +1,284 @@
+"""Heterogeneous-config fleet sweeps, sharded across devices.
+
+The paper's deployment context is a cloud block store running thousands of
+volumes with differing workloads *and differing tuning*; reproducing its WA
+claims at that scale means sweeping scheme × selector × GP-threshold over a
+fleet in one compiled program. This module supplies the three pieces on top
+of `jaxsim.fleet_body`:
+
+1. **Policy encoding** — `FleetPolicy` holds the per-volume traced knobs
+   (scheme id, selector id, GP threshold, nc window) as (V,) numpy arrays;
+   `policy_grid` lays a (scheme × selector × gp) grid over a fleet,
+   cell-major, so `tracegen.tiled_fleet` can replay identical workloads
+   under every cell for a fair comparison.
+2. **Capacity sizing** — `hetero_config` pads the class axis to the widest
+   scheme present and sizes the segment pool from the sweep's maximum GP
+   threshold (the maximum-capacity cell: steady occupancy ~ live/(1-gp)),
+   so a mixed-threshold fleet never exhausts the free pool spuriously.
+3. **Device sharding** — `simulate_fleet_hetero` runs the fleet axis under
+   `shard_map` over a 1-D "fleet" mesh (volumes are independent: no
+   collectives, embarrassingly parallel), with a plain `jax.jit` fallback on
+   a single device. The fleet is padded to a multiple of the device count by
+   replicating the last volume; pad rows are dropped before summarizing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .jaxsim import (JaxSimConfig, SCHEME_CLASSES, SCHEME_IDS, SCHEME_NAMES,
+                     SELECTOR_IDS, SELECTOR_NAMES, _run_fleet, coerce_fleet,
+                     fleet_body, summarize_fleet)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetPolicy:
+    """Per-volume placement policy arrays, all shaped (V,)."""
+    scheme_id: np.ndarray      # int32, jaxsim.SCHEME_IDS
+    selector_id: np.ndarray    # int32, jaxsim.SELECTOR_IDS
+    gp_threshold: np.ndarray   # float32
+    nc_window: np.ndarray      # int32
+
+    def __post_init__(self):
+        v = len(self.scheme_id)
+        for f in dataclasses.fields(self):
+            if len(getattr(self, f.name)) != v:
+                raise ValueError("policy arrays must share one fleet length")
+
+    @property
+    def n_volumes(self) -> int:
+        return len(self.scheme_id)
+
+    @property
+    def n_classes(self) -> np.ndarray:
+        """Per-volume live class count (scheme-derived)."""
+        return np.asarray(SCHEME_CLASSES, np.int32)[self.scheme_id]
+
+    @property
+    def max_classes(self) -> int:
+        return int(self.n_classes.max())
+
+    def as_state_arrays(self) -> dict:
+        """The (V,) traced-policy arrays `jaxsim.fleet_body` vmaps over."""
+        return {
+            "p_scheme": jnp.asarray(self.scheme_id, jnp.int32),
+            "p_selector": jnp.asarray(self.selector_id, jnp.int32),
+            "p_gp": jnp.asarray(self.gp_threshold, jnp.float32),
+            "p_ncw": jnp.asarray(self.nc_window, jnp.int32),
+            "p_classes": jnp.asarray(self.n_classes, jnp.int32),
+        }
+
+    def volume(self, i: int) -> dict:
+        """Scalar policy dict for volume ``i`` (simulate_jax's ``policy=``)."""
+        return {k: v[i] for k, v in self.as_state_arrays().items()}
+
+    def describe(self, i: int) -> tuple[str, str, float]:
+        return (SCHEME_NAMES[int(self.scheme_id[i])],
+                SELECTOR_NAMES[int(self.selector_id[i])],
+                float(self.gp_threshold[i]))
+
+
+def _coerce(values, v, ids=None, dtype=np.int32):
+    """Broadcast a scalar / name / sequence to a (V,) policy array."""
+    if isinstance(values, (str, int, float)):
+        values = [values] * v
+    if ids is not None:
+        values = [ids[x] if isinstance(x, str) else x for x in values]
+    out = np.asarray(values, dtype)
+    if out.shape != (v,):
+        raise ValueError(f"expected {v} per-volume values, got {out.shape}")
+    return out
+
+
+def encode_policies(n_volumes: int, *, schemes="sepbit",
+                    selectors="cost_benefit", gp_thresholds=0.15,
+                    nc_windows=16) -> FleetPolicy:
+    """Build a FleetPolicy from names/scalars (broadcast) or sequences."""
+    return FleetPolicy(
+        scheme_id=_coerce(schemes, n_volumes, SCHEME_IDS),
+        selector_id=_coerce(selectors, n_volumes, SELECTOR_IDS),
+        gp_threshold=_coerce(gp_thresholds, n_volumes, dtype=np.float32),
+        nc_window=_coerce(nc_windows, n_volumes),
+    )
+
+
+def policy_grid(schemes, selectors, gp_thresholds, *, volumes_per_cell: int = 1,
+                nc_window: int = 16) -> tuple[FleetPolicy, list[tuple]]:
+    """Cartesian (scheme × selector × gp) grid, ``volumes_per_cell`` volumes
+    per cell, laid out cell-major (cell 0's volumes first). Returns the
+    policy plus the cell list ``[(scheme, selector, gp), ...]`` in order."""
+    cells = list(itertools.product(schemes, selectors, gp_thresholds))
+    v = len(cells) * volumes_per_cell
+    sch, sel, gp = zip(*(c for c in cells for _ in range(volumes_per_cell)))
+    return encode_policies(v, schemes=list(sch), selectors=list(sel),
+                           gp_thresholds=list(gp), nc_windows=nc_window), cells
+
+
+def hetero_config(cfg: JaxSimConfig, policy: FleetPolicy) -> JaxSimConfig:
+    """Static config shared by every volume of a heterogeneous fleet.
+
+    The class axis is padded to the widest scheme present. The segment pool
+    (s_max) was previously derived from the single ``cfg.gp_threshold``; for
+    a mixed-threshold sweep it must be sized from the threshold whose cell
+    needs the *most* capacity. GC triggers when the garbage proportion
+    exceeds the threshold, so steady-state occupancy grows as
+    live/(1 - gp): the sweep's **maximum** threshold tolerates the most
+    resident garbage and bounds the pool. Sizing from ``cfg.gp_threshold``
+    (or the sweep minimum) would let a high-threshold volume exhaust the
+    free pool spuriously (regression-tested in tests/test_fleet.py)."""
+    slots = max(policy.max_classes, cfg.class_slots or 0)
+    base = dataclasses.replace(cfg, class_slots=slots)
+    if cfg.n_segments is None:
+        sized = dataclasses.replace(base, gp_threshold=float(
+            np.max(policy.gp_threshold)))
+        base = dataclasses.replace(base, n_segments=sized.s_max)
+    return base
+
+
+def matching_single_config(cfg: JaxSimConfig, policy: FleetPolicy,
+                           i: int) -> JaxSimConfig:
+    """The plain single-volume config that volume ``i`` of a heterogeneous
+    fleet must be bit-identical to: its own scheme/selector/gp knobs, with
+    only the segment-pool size pinned to the fleet's shared value (array
+    shapes must agree for replay parity; class padding need not — padded
+    slots are exact no-ops)."""
+    scheme, selector, gp = policy.describe(i)
+    fleet_cfg = hetero_config(cfg, policy)
+    return dataclasses.replace(
+        cfg, scheme=scheme, selector=selector, gp_threshold=gp,
+        nc_window=int(policy.nc_window[i]), n_segments=fleet_cfg.s_max,
+        class_slots=None)
+
+
+# -- device sharding ----------------------------------------------------------
+
+def fleet_mesh(min_devices: int = 2) -> Mesh | None:
+    """1-D mesh over every local device, or None when sharding is pointless
+    (single device). CPU hosts expose >1 device only under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    devices = jax.devices()
+    if len(devices) < min_devices:
+        return None
+    return Mesh(np.asarray(devices), ("fleet",))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_runner(cfg: JaxSimConfig, masked: bool, mesh: Mesh):
+    """jit(shard_map(fleet_body)) over the fleet axis. Volumes are fully
+    independent, so every input/output leaf shards its leading axis and the
+    body runs collective-free on each device's slice of the fleet."""
+    body = functools.partial(fleet_body, cfg, masked)
+    return jax.jit(shard_map(body, mesh=mesh,
+                             in_specs=(P("fleet"), P("fleet")),
+                             out_specs=P("fleet"), check_rep=False))
+
+
+def simulate_fleet_hetero(traces, cfg: JaxSimConfig, policy: FleetPolicy, *,
+                          mesh: Mesh | None = None, shard: bool = True,
+                          return_state: bool = False):
+    """Replay a heterogeneous-config fleet in one compiled program, sharded
+    across devices when more than one is visible.
+
+    ``traces``: list of 1-D LBA traces or padded (V, T) matrix; ``policy``:
+    per-volume knobs (see :func:`encode_policies` / :func:`policy_grid`).
+    ``cfg`` supplies the static shape knobs (n_lbas, segment size, kernels);
+    its scheme/selector/gp are ignored in favor of ``policy``. Returns the
+    same result dict as `simulate_fleet` (plus the final batched state when
+    ``return_state``)."""
+    padded = coerce_fleet(traces)
+    V = padded.shape[0]
+    if policy.n_volumes != V:
+        raise ValueError(f"policy covers {policy.n_volumes} volumes, "
+                         f"traces cover {V}")
+    cfg_h = hetero_config(cfg, policy)
+    masked = bool((padded < 0).any())
+    pol_arrays = policy.as_state_arrays()
+
+    if mesh is None and shard:
+        mesh = fleet_mesh()
+    if mesh is not None and mesh.size > 1:
+        d = mesh.size
+        pad_rows = (-V) % d
+        if pad_rows:  # replicate the last volume; dropped after the run
+            padded = np.concatenate([padded, np.repeat(padded[-1:], pad_rows, 0)])
+            pol_arrays = {k: jnp.concatenate(
+                [v, jnp.repeat(v[-1:], pad_rows, 0)]) for k, v in pol_arrays.items()}
+        st = _sharded_runner(cfg_h, masked, mesh)(jnp.asarray(padded), pol_arrays)
+        st = jax.block_until_ready(st)
+        if pad_rows:
+            st = jax.tree_util.tree_map(lambda x: x[:V], st)
+    else:
+        st = jax.block_until_ready(
+            _run_fleet(cfg_h, jnp.asarray(padded), masked, pol_arrays))
+    res = summarize_fleet(cfg_h, st, V)
+    res["fleet"]["n_devices"] = 1 if mesh is None else mesh.size
+    if return_state:
+        return res, jax.device_get(st)
+    return res
+
+
+# -- sweep aggregation ---------------------------------------------------------
+
+def sweep_summary(res: dict, policy: FleetPolicy,
+                  cells: list[tuple] | None = None) -> list[dict]:
+    """Aggregate a heterogeneous fleet result per policy cell.
+
+    Returns one row per (scheme, selector, gp) with user/GC write totals and
+    the cell's overall WA, in grid order when ``cells`` is given (else in
+    order of first appearance)."""
+    groups: dict[tuple, dict] = {}
+    order = []
+    for i, vol in enumerate(res["volumes"]):
+        key = policy.describe(i)
+        if key not in groups:
+            groups[key] = {"scheme": key[0], "selector": key[1],
+                           "gp_threshold": key[2], "n_volumes": 0,
+                           "user_writes": 0, "gc_writes": 0,
+                           "free_exhausted": 0, "per_volume_wa": []}
+            order.append(key)
+        g = groups[key]
+        g["n_volumes"] += 1
+        g["user_writes"] += vol["user_writes"]
+        g["gc_writes"] += vol["gc_writes"]
+        g["free_exhausted"] += vol["free_exhausted"]
+        g["per_volume_wa"].append(vol["wa"])
+    if cells is not None:
+        # group keys carry float32 thresholds (they round-trip the device);
+        # normalize the grid's python floats the same way before matching
+        norm = [(s, sel, float(np.float32(gp))) for s, sel, gp in cells]
+        order = [key for key in norm if key in groups]
+    rows = []
+    for key in order:
+        g = groups[key]
+        g["wa"] = (g["user_writes"] + g["gc_writes"]) / max(g["user_writes"], 1)
+        g["median_wa"] = float(np.median(g["per_volume_wa"]))
+        rows.append(g)
+    return rows
+
+
+def simulate_fleet_sweep(traces, cfg: JaxSimConfig, *, schemes, selectors,
+                         gp_thresholds, nc_window: int = 16,
+                         mesh: Mesh | None = None, shard: bool = True) -> dict:
+    """One-call sweep: ``traces`` must hold ``cells × per_cell`` volumes laid
+    out cell-major (see `tracegen.tiled_fleet`). Returns the fleet result
+    with a ``"sweep"`` list of per-cell aggregates attached."""
+    padded = coerce_fleet(traces)
+    cells = list(itertools.product(schemes, selectors, gp_thresholds))
+    if padded.shape[0] % len(cells):
+        raise ValueError(f"{padded.shape[0]} volumes do not tile a "
+                         f"{len(cells)}-cell grid")
+    per_cell = padded.shape[0] // len(cells)
+    policy, cells = policy_grid(schemes, selectors, gp_thresholds,
+                                volumes_per_cell=per_cell, nc_window=nc_window)
+    res = simulate_fleet_hetero(padded, cfg, policy, mesh=mesh, shard=shard)
+    res["sweep"] = sweep_summary(res, policy, cells)
+    res["policy"] = policy
+    return res

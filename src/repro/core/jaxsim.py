@@ -23,6 +23,17 @@ so each volume's replay is bit-identical to a single-volume `simulate_jax`.
 With ``cfg.use_kernels`` the GC victim argmax routes through the Pallas
 ``kernels/segsel`` kernel and SepBIT class assignment through
 ``kernels/classify``; the pure-jnp expressions remain the fallback/oracle.
+
+Heterogeneous-config fleets: the per-volume policy knobs (scheme, selector,
+GP threshold, nc window) are *traced* scalars carried inside the state pytree
+("p_scheme", "p_selector", "p_gp", "p_ncw", "p_classes"), not Python-static
+config, so one compiled program can replay a fleet where every volume runs a
+different placement policy. Scheme/selector dispatch is `jnp.where` over the
+policy ids; the class axis is padded to ``cfg.n_class_slots`` (6 for any
+fleet containing SepBIT) with inactive classes masked to exact no-ops, so a
+volume's replay stays bit-identical to a single-volume run of its own
+scheme-derived config. `core/fleetshard.py` builds the per-volume policy
+arrays and shards the fleet axis across devices.
 """
 
 from __future__ import annotations
@@ -35,6 +46,15 @@ import jax.numpy as jnp
 import numpy as np
 
 BIG = jnp.int32(2 ** 30)
+
+# Policy-id encodings for the traced per-volume knobs. Scheme ids are ordered
+# by class count so "max id present" also names the widest class axis.
+SCHEME_IDS = {"nosep": 0, "sepgc": 1, "sepbit": 2}
+SCHEME_NAMES = tuple(SCHEME_IDS)
+SCHEME_CLASSES = (1, 2, 6)              # classes used by each scheme id
+SELECTOR_IDS = {"greedy": 0, "cost_benefit": 1}
+SELECTOR_NAMES = tuple(SELECTOR_IDS)
+MAX_CLASSES = max(SCHEME_CLASSES)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,10 +69,18 @@ class JaxSimConfig:
     n_segments: int | None = None           # S_max; default sized from capacity
     use_kernels: bool = False               # route hot paths via Pallas kernels
     kernels_interpret: bool = True          # interpret mode (CPU); False on TPU
+    class_slots: int | None = None          # pad the class axis (hetero fleets)
 
     @property
     def n_classes(self) -> int:
         return {"sepbit": 6, "sepgc": 2, "nosep": 1}[self.scheme]
+
+    @property
+    def n_class_slots(self) -> int:
+        """Static width of the class axis. Heterogeneous fleets pad every
+        volume to the widest scheme present; classes >= the volume's own
+        count are masked to no-ops."""
+        return self.class_slots if self.class_slots is not None else self.n_classes
 
     @property
     def s_max(self) -> int:
@@ -60,7 +88,7 @@ class JaxSimConfig:
             return self.n_segments
         cap_segments = int(np.ceil(self.n_lbas / (1.0 - self.gp_threshold)
                                    / self.segment_size))
-        return 2 * cap_segments + 4 * self.n_classes + 8
+        return 2 * cap_segments + 4 * self.n_class_slots + 8
 
     @property
     def pad_row(self) -> int:
@@ -72,7 +100,18 @@ class JaxSimConfig:
         return self.s_max + 1
 
 
-def init_state(cfg: JaxSimConfig) -> dict:
+def default_policy(cfg: JaxSimConfig) -> dict:
+    """Traced-policy scalars equivalent to the static knobs in ``cfg``."""
+    return {
+        "p_scheme": jnp.int32(SCHEME_IDS[cfg.scheme]),
+        "p_selector": jnp.int32(SELECTOR_IDS[cfg.selector]),
+        "p_gp": jnp.float32(cfg.gp_threshold),
+        "p_ncw": jnp.int32(cfg.nc_window),
+        "p_classes": jnp.int32(cfg.n_classes),
+    }
+
+
+def init_state(cfg: JaxSimConfig, policy: dict | None = None) -> dict:
     # Segment arrays carry one extra *sacrificial* row (index cfg.pad_row,
     # state 3 = reserved): when the free pool is exhausted, allocations land
     # there instead of wrapping around to row S-1 via negative indexing and
@@ -81,7 +120,16 @@ def init_state(cfg: JaxSimConfig) -> dict:
     # dropped, so occupancy/GP stats degrade to logical rather than physical
     # accounting) — live rows are never corrupted, and every pad allocation
     # is counted in ``overflow`` so callers can detect an undersized config.
-    R, s, C, n = cfg.n_rows, cfg.segment_size, cfg.n_classes, cfg.n_lbas
+    #
+    # ``policy`` (traced per-volume knobs, see default_policy) controls how
+    # many of the C class slots are live: slots >= p_classes stay free and are
+    # masked to no-ops everywhere downstream, so a padded-class volume is
+    # bit-identical to one built with its own scheme-derived class count.
+    if policy is None:
+        policy = default_policy(cfg)
+    active = jnp.asarray(policy["p_classes"], jnp.int32)
+    R, s, C, n = cfg.n_rows, cfg.segment_size, cfg.n_class_slots, cfg.n_lbas
+    slot = jnp.arange(C, dtype=jnp.int32)
     state = {
         "seg_lba": jnp.zeros((R, s), jnp.int32),
         "seg_utime": jnp.zeros((R, s), jnp.int32),
@@ -109,44 +157,51 @@ def init_state(cfg: JaxSimConfig) -> dict:
         "class_user": jnp.zeros(C, jnp.int32),
         "class_gc": jnp.zeros(C, jnp.int32),
     }
-    # the first C segments start open, one per class
-    state["seg_state"] = state["seg_state"].at[:C].set(1)
-    state["seg_cls"] = state["seg_cls"].at[:C].set(jnp.arange(C, dtype=jnp.int32))
+    state.update({k: jnp.asarray(v) for k, v in policy.items()})
+    # the first p_classes segments start open, one per live class; padded
+    # class slots leave their row in the free pool (as it would be for a
+    # config without the padding)
+    state["seg_state"] = state["seg_state"].at[:C].set(
+        jnp.where(slot < active, 1, 0))
+    state["seg_cls"] = state["seg_cls"].at[:C].set(jnp.where(slot < active, slot, 0))
     state["seg_state"] = state["seg_state"].at[cfg.pad_row].set(3)
     return state
 
 
-# -- placement rules ---------------------------------------------------------
+# -- placement rules (dispatched on the traced per-volume policy ids) ---------
 
-def _user_class(cfg: JaxSimConfig, v, ell):
-    if cfg.scheme == "sepbit":
-        return jnp.where(v.astype(jnp.float32) < ell, 0, 1).astype(jnp.int32)
-    return jnp.int32(0)
+def _user_class(st, v):
+    sepbit = jnp.where(v.astype(jnp.float32) < st["ell"], 0, 1).astype(jnp.int32)
+    return jnp.where(st["p_scheme"] == SCHEME_IDS["sepbit"], sepbit, 0)
 
 
-def _gc_classes(cfg: JaxSimConfig, victim_cls, g, ell):
+def _gc_classes(st, victim_cls, g):
     """Class per rewritten block (Algorithm 1 GCWrite), vectorized over the
     victim's slots. ``g`` = age = t - last user write time."""
-    if cfg.scheme == "sepbit":
-        gf = g.astype(jnp.float32)
-        by_age = jnp.where(gf < 4 * ell, 3, jnp.where(gf < 16 * ell, 4, 5))
-        return jnp.where(victim_cls == 0, 2, by_age).astype(jnp.int32)
-    if cfg.scheme == "sepgc":
-        return jnp.full(g.shape, 1, jnp.int32)
-    return jnp.zeros(g.shape, jnp.int32)
+    gf = g.astype(jnp.float32)
+    ell = st["ell"]
+    by_age = jnp.where(gf < 4 * ell, 3, jnp.where(gf < 16 * ell, 4, 5))
+    sepbit = jnp.where(victim_cls == 0, 2, by_age)
+    sepgc = jnp.full(g.shape, 1, jnp.int32)
+    return jnp.where(
+        st["p_scheme"] == SCHEME_IDS["sepbit"], sepbit,
+        jnp.where(st["p_scheme"] == SCHEME_IDS["sepgc"], sepgc, 0),
+    ).astype(jnp.int32)
 
 
-def _scores(cfg: JaxSimConfig, st):
-    """Victim scores over all segments; -inf for non-sealed / zero-garbage."""
+def _scores(st):
+    """Victim scores over all segments; -inf for non-sealed / zero-garbage.
+    Both selectors are evaluated and the volume's traced id picks one — the
+    per-branch values are unchanged from the static-config formulation."""
     n = st["seg_n"].astype(jnp.float32)
     nv = st["seg_nvalid"].astype(jnp.float32)
     garbage = n - nv
-    if cfg.selector == "greedy":
-        score = garbage / jnp.maximum(n, 1.0)
-    else:
-        u = nv / jnp.maximum(n, 1.0)
-        age = jnp.maximum(st["t"] - st["seg_stime"], 0).astype(jnp.float32)
-        score = (1.0 - u) * age / (1.0 + u)
+    greedy = garbage / jnp.maximum(n, 1.0)
+    u = nv / jnp.maximum(n, 1.0)
+    age = jnp.maximum(st["t"] - st["seg_stime"], 0).astype(jnp.float32)
+    cost_benefit = (1.0 - u) * age / (1.0 + u)
+    score = jnp.where(st["p_selector"] == SELECTOR_IDS["greedy"],
+                      greedy, cost_benefit)
     eligible = (st["seg_state"] == 2) & (garbage > 0)
     return jnp.where(eligible, score, -jnp.inf)
 
@@ -156,21 +211,24 @@ def _scores(cfg: JaxSimConfig, st):
 def _select_victim(cfg: JaxSimConfig, st):
     """GC victim argmax, or -1 when no segment is eligible — Pallas segsel
     kernel or the jnp oracle above. Runs once per GC iteration: the result
-    both gates the trigger loop and names the victim."""
+    both gates the trigger loop and names the victim. The selector is the
+    volume's traced policy id (a per-volume scalar input to the kernel)."""
     if cfg.use_kernels:
         from repro.kernels.segsel import segment_select
         idx, _ = segment_select(
             st["seg_n"], st["seg_nvalid"], st["seg_stime"], st["seg_state"],
-            st["t"], selector=cfg.selector, interpret=cfg.kernels_interpret)
+            st["t"], selector_id=st["p_selector"],
+            interpret=cfg.kernels_interpret)
         return idx.astype(jnp.int32)
-    scores = _scores(cfg, st)
+    scores = _scores(st)
     idx = jnp.argmax(scores).astype(jnp.int32)
     return jnp.where(jnp.isfinite(scores[idx]), idx, -1)
 
 
-def _classify_kernel_call(cfg: JaxSimConfig, v, g, from_c1, is_gc, ell):
+def _classify_kernel_call(cfg: JaxSimConfig, st, v, g, from_c1, is_gc):
     from repro.kernels.classify import classify
-    return classify(v, g, from_c1, is_gc, ell, interpret=cfg.kernels_interpret)
+    return classify(v, g, from_c1, is_gc, st["ell"],
+                    scheme_id=st["p_scheme"], interpret=cfg.kernels_interpret)
 
 
 # -- GC: rewrite one victim segment ------------------------------------------
@@ -185,7 +243,7 @@ def _alloc_free_ids(cfg: JaxSimConfig, st, count):
 
 
 def _gc_once(cfg: JaxSimConfig, st, victim):
-    s, C, n = cfg.segment_size, cfg.n_classes, cfg.n_lbas
+    s, C, n = cfg.segment_size, cfg.n_class_slots, cfg.n_lbas
     victim = jnp.maximum(victim, 0)  # caller guards eligibility (victim >= 0)
 
     lba_v = st["seg_lba"][victim]
@@ -200,18 +258,19 @@ def _gc_once(cfg: JaxSimConfig, st, victim):
     nc = st["nc"] + jnp.where(is_c1, 1, 0)
     ell_tot = st["ell_tot"] + jnp.where(
         is_c1, (st["t"] - st["seg_ctime"][victim]).astype(jnp.float32), 0.0)
-    refresh = nc >= cfg.nc_window
+    refresh = nc >= st["p_ncw"]
     ell = jnp.where(refresh, ell_tot / jnp.maximum(nc, 1), st["ell"])
     nc = jnp.where(refresh, 0, nc)
     ell_tot = jnp.where(refresh, 0.0, ell_tot)
+    st_ell = dict(st, ell=ell)
 
     g = st["t"] - utime_v
-    if cfg.use_kernels and cfg.scheme == "sepbit":
+    if cfg.use_kernels:
         from_c1 = jnp.full(g.shape, 0, jnp.int32) + (victim_cls == 0)
-        gc_cls = _classify_kernel_call(cfg, jnp.zeros_like(g), g, from_c1,
-                                       jnp.ones_like(g), ell)
+        gc_cls = _classify_kernel_call(cfg, st_ell, jnp.zeros_like(g), g,
+                                       from_c1, jnp.ones_like(g))
     else:
-        gc_cls = _gc_classes(cfg, victim_cls, g, ell)
+        gc_cls = _gc_classes(st_ell, victim_cls, g)
     classes = jnp.where(valid_v, gc_cls, -1)
 
     free_ids = _alloc_free_ids(cfg, st, C)
@@ -225,6 +284,12 @@ def _gc_once(cfg: JaxSimConfig, st, victim):
     overflow = st["overflow"]
 
     for cls in range(C):  # static unroll; each class's blocks batch-appended
+        # padded class slots (cls >= the volume's own class count) must be
+        # exact no-ops: their k is always 0 (the classifier never emits an
+        # inactive class id), but the seal/promote logic below also reads
+        # seg_n through a stale open_sid that may now belong to another
+        # class's recycled row — gate it so nothing is touched.
+        cls_active = jnp.int32(cls) < st["p_classes"]
         mask = classes == cls
         ranks = jnp.cumsum(mask) - 1
         k = jnp.where(mask.any(), jnp.max(jnp.where(mask, ranks, -1)) + 1, 0)
@@ -268,7 +333,7 @@ def _gc_once(cfg: JaxSimConfig, st, victim):
         class_gc = class_gc.at[cls].add(k)
 
         # seal-if-full + promote the fresh segment to open
-        sealed_now = seg_n[sid] >= s
+        sealed_now = cls_active & (seg_n[sid] >= s)
         seg_state = seg_state.at[sid].set(jnp.where(sealed_now, 2, seg_state[sid]))
         seg_stime = seg_stime.at[sid].set(jnp.where(sealed_now, st["t"], seg_stime[sid]))
         promote = sealed_now
@@ -318,7 +383,7 @@ def _maybe_gc(cfg: JaxSimConfig, st):
     # names the victim for _gc_once, for the kernel and jnp paths alike.
     def cond(carry):
         st, i, victim = carry
-        return (_gp(st) > cfg.gp_threshold) & (victim >= 0) \
+        return (_gp(st) > st["p_gp"]) & (victim >= 0) \
             & (i < cfg.max_gc_per_step)
 
     def body(carry):
@@ -334,7 +399,7 @@ def _maybe_gc(cfg: JaxSimConfig, st):
 # -- per-user-write step -------------------------------------------------------
 
 def _user_step(cfg: JaxSimConfig, st, lba):
-    s, C, n = cfg.segment_size, cfg.n_classes, cfg.n_lbas
+    s, C, n = cfg.segment_size, cfg.n_class_slots, cfg.n_lbas
     t = st["t"]
 
     # invalidate predecessor (no-op for a fresh LBA: loc_seg = -1 drops;
@@ -347,11 +412,11 @@ def _user_step(cfg: JaxSimConfig, st, lba):
     seg_nvalid = st["seg_nvalid"].at[drop_sid].add(-1, mode="drop")
     v = t - st["last_uw"][lba]  # huge for fresh LBAs => "infinite lifespan"
 
-    if cfg.use_kernels and cfg.scheme == "sepbit":
-        zero = jnp.zeros((1,), jnp.int32)
-        cls = _classify_kernel_call(cfg, v[None], zero, zero, zero, st["ell"])[0]
-    else:
-        cls = _user_class(cfg, v, st["ell"])
+    # user writes classify one block at a time — a Pallas call would pad the
+    # single element to a full (8, 128) tile every scan step, so the scalar
+    # jnp dispatch serves both modes (bit-identical to the kernel; the
+    # segment-wide GC batch in _gc_once is where the kernel earns its tile)
+    cls = _user_class(st, v)
     sid = st["open_sid"][cls]
     off = st["seg_n"][sid]
     # mode="drop": off can reach s only on the over-capacity pad row
@@ -393,8 +458,8 @@ def _user_step(cfg: JaxSimConfig, st, lba):
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def _run(cfg: JaxSimConfig, trace: jnp.ndarray) -> dict:
-    st = init_state(cfg)
+def _run(cfg: JaxSimConfig, trace: jnp.ndarray, policy: dict | None = None) -> dict:
+    st = init_state(cfg, policy)
 
     def step(st, lba):
         return _user_step(cfg, st, lba), None
@@ -408,8 +473,9 @@ def _summary(cfg: JaxSimConfig, st: dict) -> dict:
     user = int(st["user_writes"])
     gc_writes = int(st["gc_writes"])
     return {
-        "scheme": cfg.scheme,
-        "selector": cfg.selector,
+        "scheme": SCHEME_NAMES[int(st["p_scheme"])],
+        "selector": SELECTOR_NAMES[int(st["p_selector"])],
+        "gp_threshold": float(st["p_gp"]),
         "user_writes": user,
         "gc_writes": gc_writes,
         "wa": (user + gc_writes) / user if user else 1.0,
@@ -421,10 +487,16 @@ def _summary(cfg: JaxSimConfig, st: dict) -> dict:
     }
 
 
-def simulate_jax(trace: np.ndarray, cfg: JaxSimConfig) -> dict:
-    """Replay ``trace`` on the XLA state machine; returns summary stats."""
+def simulate_jax(trace: np.ndarray, cfg: JaxSimConfig,
+                 policy: dict | None = None) -> dict:
+    """Replay ``trace`` on the XLA state machine; returns summary stats.
+
+    ``policy`` optionally overrides the config's placement knobs with traced
+    scalars (see :func:`default_policy`) — same compiled program for every
+    policy, used by the differential harness to pit one static config shape
+    against many policies without recompiling."""
     trace = jnp.asarray(np.asarray(trace, dtype=np.int32))
-    st = jax.block_until_ready(_run(cfg, trace))
+    st = jax.block_until_ready(_run(cfg, trace, policy))
     return _summary(cfg, jax.device_get(st))
 
 
@@ -448,12 +520,21 @@ def _masked_step(cfg: JaxSimConfig, st, lba):
     return jax.tree_util.tree_map(lambda a, b: jnp.where(active, a, b), new, st)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def _run_fleet(cfg: JaxSimConfig, traces: jnp.ndarray, masked: bool) -> dict:
-    V = traces.shape[0]
-    st0 = init_state(cfg)
-    st = jax.tree_util.tree_map(
-        lambda x: jnp.broadcast_to(x[None], (V,) + x.shape), st0)
+def broadcast_policies(cfg: JaxSimConfig, n_volumes: int) -> dict:
+    """Uniform (V,)-shaped policy arrays replicating ``cfg``'s knobs."""
+    pol = default_policy(cfg)
+    return {k: jnp.broadcast_to(v, (n_volumes,)) for k, v in pol.items()}
+
+
+def fleet_body(cfg: JaxSimConfig, masked: bool, traces: jnp.ndarray,
+               policies: dict) -> dict:
+    """The (un-jitted) fleet replay: vmapped scan over a leading volume axis.
+
+    ``policies`` is a dict of (V,)-shaped traced policy arrays (see
+    :func:`default_policy` for the keys) — each volume runs its own scheme /
+    selector / GP threshold / nc window. Exposed un-jitted so
+    `core/fleetshard.py` can wrap it in `shard_map` over the fleet axis."""
+    st = jax.vmap(lambda pol: init_state(cfg, pol))(policies)
     # ``masked`` is static: uniform-length fleets (no -1 padding anywhere)
     # skip the per-step state select entirely.
     inner = _masked_step if masked else _user_step
@@ -465,32 +546,23 @@ def _run_fleet(cfg: JaxSimConfig, traces: jnp.ndarray, masked: bool) -> dict:
     return st
 
 
-def simulate_fleet(traces, cfg: JaxSimConfig) -> dict:
-    """Replay N independent volumes in one compiled program.
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def _run_fleet(cfg: JaxSimConfig, traces: jnp.ndarray, masked: bool,
+               policies: dict) -> dict:
+    return fleet_body(cfg, masked, traces, policies)
 
-    ``traces``: a list of 1-D LBA arrays (heterogeneous lengths allowed) or a
-    pre-padded (V, T) int32 matrix with -1 padding. All volumes share ``cfg``
-    (one XLA program); per-volume results are bit-identical to running each
-    trace through :func:`simulate_jax` alone.
 
-    Returns ``{"volumes": [per-volume summary, ...], "fleet": aggregate}``.
-    """
-    padded = np.asarray(traces, dtype=np.int32) if isinstance(traces, np.ndarray) \
-        else pad_fleet(traces)
-    if padded.ndim != 2:
-        raise ValueError("traces must be a list of 1-D traces or a (V, T) matrix")
-    masked = bool((padded < 0).any())
-    st = jax.block_until_ready(_run_fleet(cfg, jnp.asarray(padded), masked))
+def summarize_fleet(cfg: JaxSimConfig, st: dict, n_volumes: int) -> dict:
+    """Host-side per-volume summaries + fleet aggregate from a batched state."""
     st = jax.device_get(st)
-    V = padded.shape[0]
     vols = [_summary(cfg, jax.tree_util.tree_map(lambda x: x[i], st))
-            for i in range(V)]
+            for i in range(n_volumes)]
     user = sum(r["user_writes"] for r in vols)
     gc = sum(r["gc_writes"] for r in vols)
     return {
         "volumes": vols,
         "fleet": {
-            "n_volumes": V,
+            "n_volumes": n_volumes,
             "user_writes": user,
             "gc_writes": gc,
             "wa": (user + gc) / max(user, 1),
@@ -498,3 +570,36 @@ def simulate_fleet(traces, cfg: JaxSimConfig) -> dict:
             "per_volume_wa": [r["wa"] for r in vols],
         },
     }
+
+
+def coerce_fleet(traces) -> np.ndarray:
+    """Normalize a list of 1-D traces / (V, T) matrix to padded int32."""
+    padded = np.asarray(traces, dtype=np.int32) if isinstance(traces, np.ndarray) \
+        else pad_fleet(traces)
+    if padded.ndim != 2:
+        raise ValueError("traces must be a list of 1-D traces or a (V, T) matrix")
+    return padded
+
+
+def simulate_fleet(traces, cfg: JaxSimConfig, policies: dict | None = None) -> dict:
+    """Replay N independent volumes in one compiled program.
+
+    ``traces``: a list of 1-D LBA arrays (heterogeneous lengths allowed) or a
+    pre-padded (V, T) int32 matrix with -1 padding. ``policies`` optionally
+    supplies (V,)-shaped per-volume policy arrays (heterogeneous configs; see
+    `core/fleetshard.py` for the encoder and the device-sharded runner) —
+    when omitted every volume runs ``cfg``'s knobs. Either way per-volume
+    results are bit-identical to running each trace through
+    :func:`simulate_jax` alone with the matching policy.
+
+    Returns ``{"volumes": [per-volume summary, ...], "fleet": aggregate}``.
+    """
+    padded = coerce_fleet(traces)
+    V = padded.shape[0]
+    masked = bool((padded < 0).any())
+    if policies is None:
+        policies = broadcast_policies(cfg, V)
+    policies = {k: jnp.asarray(v) for k, v in policies.items()}
+    st = jax.block_until_ready(
+        _run_fleet(cfg, jnp.asarray(padded), masked, policies))
+    return summarize_fleet(cfg, st, V)

@@ -102,3 +102,13 @@ def make_fleet(kind: str, n_volumes: int, n_lbas: int, n_updates: int,
         raise ValueError(f"unknown fleet kind {kind!r}; "
                          f"options: mixed, {', '.join(FLEET_GENERATORS)}")
     return FLEET_GENERATORS[kind](n_volumes, n_lbas, n_updates, **kw)
+
+
+def tiled_fleet(kind: str, n_cells: int, per_cell: int, n_lbas: int,
+                n_updates: int, **kw) -> list[np.ndarray]:
+    """Sweep workload: ``per_cell`` scenario traces replicated across
+    ``n_cells`` policy-grid cells, cell-major (cell 0's copies first, matching
+    `fleetshard.policy_grid`). Every cell replays the *same* workloads, so
+    per-cell WA differences measure the policy, not trace luck."""
+    base = make_fleet(kind, per_cell, n_lbas, n_updates, **kw)
+    return [t for _ in range(n_cells) for t in base]

@@ -10,6 +10,11 @@ where a KV-compaction tick classifies thousands of pages at once:
 
 Inputs: v (predecessor lifespan), g (age), from_c1 / is_gc flags, and the
 scalar ell; elementwise over (8,128)-tiled int32 blocks on the VPU.
+
+The scheme is a *runtime* scalar (0 = nosep, 1 = sepgc, 2 = sepbit, matching
+jaxsim.SCHEME_IDS): heterogeneous fleets vmap this kernel with a different
+scheme per volume. NoSep collapses every class to 0, SepGC to {0 user,
+1 GC}, SepBIT runs Algorithm 1 above.
 """
 
 from __future__ import annotations
@@ -24,8 +29,13 @@ LANE = 128
 TILE_ROWS = 8
 
 
-def _classify_kernel(ell_ref, v_ref, g_ref, from_c1_ref, is_gc_ref, out_ref):
+NOSEP, SEPGC, SEPBIT = 0, 1, 2   # scheme ids (must match jaxsim.SCHEME_IDS)
+
+
+def _classify_kernel(ell_ref, scheme_ref, v_ref, g_ref, from_c1_ref, is_gc_ref,
+                     out_ref):
     ell = ell_ref[0, 0]
+    scheme = scheme_ref[0, 0]
     v = v_ref[...].astype(jnp.float32)
     g = g_ref[...].astype(jnp.float32)
     from_c1 = from_c1_ref[...] != 0
@@ -34,29 +44,39 @@ def _classify_kernel(ell_ref, v_ref, g_ref, from_c1_ref, is_gc_ref, out_ref):
     user_cls = jnp.where(v < ell, 0, 1)
     age_cls = 3 + (g >= 4.0 * ell).astype(jnp.int32) + (g >= 16.0 * ell).astype(jnp.int32)
     gc_cls = jnp.where(from_c1, 2, age_cls)
-    out_ref[...] = jnp.where(is_gc, gc_cls, user_cls).astype(jnp.int32)
+    sepbit = jnp.where(is_gc, gc_cls, user_cls).astype(jnp.int32)
+    sepgc = jnp.where(is_gc, 1, 0).astype(jnp.int32)
+    out_ref[...] = jnp.where(scheme == SEPBIT, sepbit,
+                             jnp.where(scheme == SEPGC, sepgc, 0))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def classify(v: jax.Array, g: jax.Array, from_c1: jax.Array, is_gc: jax.Array,
-             ell: jax.Array, *, interpret: bool = True) -> jax.Array:
-    """SepBIT class ids for a batch of writes. 1-D equal-length inputs."""
+             ell: jax.Array, *, scheme_id: jax.Array | None = None,
+             interpret: bool = True) -> jax.Array:
+    """Placement class ids for a batch of writes. 1-D equal-length inputs.
+    ``scheme_id`` (traced int32 scalar) selects the scheme per call/volume;
+    omitted = SepBIT (the historical behavior)."""
     (B,) = v.shape
     tile = TILE_ROWS * LANE
     Bp = ((B + tile - 1) // tile) * tile
     pad = Bp - B
+    if scheme_id is None:
+        scheme_id = jnp.int32(SEPBIT)
 
     def prep(x):
         return jnp.pad(x.astype(jnp.int32), (0, pad)).reshape(Bp // LANE, LANE)
 
     v2, g2, c12, gc2 = map(prep, (v, g, from_c1, is_gc))
     spec = pl.BlockSpec((TILE_ROWS, LANE), lambda i: (i, 0))
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
     out = pl.pallas_call(
         _classify_kernel,
         grid=(Bp // tile,),
-        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)), spec, spec, spec, spec],
+        in_specs=[scalar, scalar, spec, spec, spec, spec],
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((Bp // LANE, LANE), jnp.int32),
         interpret=interpret,
-    )(ell.reshape(1, 1).astype(jnp.float32), v2, g2, c12, gc2)
+    )(ell.reshape(1, 1).astype(jnp.float32),
+      jnp.asarray(scheme_id, jnp.int32).reshape(1, 1), v2, g2, c12, gc2)
     return out.reshape(-1)[:B]

@@ -7,29 +7,35 @@ import jax.numpy as jnp
 
 
 def segment_select_ref(seg_n, seg_nvalid, seg_stime, seg_state, t, *,
-                       selector: str = "cost_benefit"):
+                       selector: str = "cost_benefit", selector_id=None):
     nf = seg_n.astype(jnp.float32)
     nvf = seg_nvalid.astype(jnp.float32)
     garbage = nf - nvf
-    if selector == "greedy":
-        score = garbage / jnp.maximum(nf, 1.0)
-    else:
-        u = nvf / jnp.maximum(nf, 1.0)
-        age = jnp.maximum(t - seg_stime, 0).astype(jnp.float32)
-        score = (1.0 - u) * age / (1.0 + u)
+    greedy = garbage / jnp.maximum(nf, 1.0)
+    u = nvf / jnp.maximum(nf, 1.0)
+    age = jnp.maximum(t - seg_stime, 0).astype(jnp.float32)
+    cost_benefit = (1.0 - u) * age / (1.0 + u)
+    if selector_id is None:
+        selector_id = {"greedy": 0, "cost_benefit": 1}[selector]
+    score = jnp.where(jnp.asarray(selector_id) == 0, greedy, cost_benefit)
     score = jnp.where((seg_state == 2) & (garbage > 0), score, -jnp.inf)
     best = jnp.max(score)
     idx = jnp.argmax(score).astype(jnp.int32)
     return jnp.where(jnp.isfinite(best), idx, -1), best
 
 
-def classify_ref(v, g, from_c1, is_gc, ell):
+def classify_ref(v, g, from_c1, is_gc, ell, *, scheme_id=None):
     v = v.astype(jnp.float32)
     g = g.astype(jnp.float32)
     user_cls = jnp.where(v < ell, 0, 1)
     age_cls = 3 + (g >= 4.0 * ell).astype(jnp.int32) + (g >= 16.0 * ell).astype(jnp.int32)
     gc_cls = jnp.where(from_c1 != 0, 2, age_cls)
-    return jnp.where(is_gc != 0, gc_cls, user_cls).astype(jnp.int32)
+    sepbit = jnp.where(is_gc != 0, gc_cls, user_cls).astype(jnp.int32)
+    if scheme_id is None:
+        return sepbit
+    sepgc = jnp.where(is_gc != 0, 1, 0).astype(jnp.int32)
+    sid = jnp.asarray(scheme_id)
+    return jnp.where(sid == 2, sepbit, jnp.where(sid == 1, sepgc, 0))
 
 
 def zipf_bit_sums_ref(probs, u0, v0, g0, r0):

@@ -12,6 +12,12 @@ Scores follow core/gc.py exactly:
   cost_benefit:  (1-u) * age / (1+u),  u = n_valid/max(n,1), age = t - stime
 Ineligible segments (not sealed, or zero garbage) score -inf; ties resolve to
 the lowest index (matching jnp.argmax).
+
+The selector is a *runtime* scalar (a (1, 1) SMEM-style block like ``t``):
+heterogeneous fleets vmap this kernel with a different selector id per
+volume, so the choice cannot be baked into the compiled kernel. Both scores
+are evaluated on the VPU and the id picks one — each branch's values are
+unchanged from the static formulation.
 """
 
 from __future__ import annotations
@@ -26,22 +32,24 @@ LANE = 128
 TILE_ROWS = 8  # (8, 128) int32/fp32 tile
 
 
-def _score_tile(n, nv, stime, state, t, selector):
+GREEDY, COST_BENEFIT = 0, 1   # selector ids (must match jaxsim.SELECTOR_IDS)
+
+
+def _score_tile(n, nv, stime, state, t, selector_id):
     nf = n.astype(jnp.float32)
     nvf = nv.astype(jnp.float32)
     garbage = nf - nvf
-    if selector == "greedy":
-        score = garbage / jnp.maximum(nf, 1.0)
-    else:
-        u = nvf / jnp.maximum(nf, 1.0)
-        age = jnp.maximum(t - stime, 0).astype(jnp.float32)
-        score = (1.0 - u) * age / (1.0 + u)
+    greedy = garbage / jnp.maximum(nf, 1.0)
+    u = nvf / jnp.maximum(nf, 1.0)
+    age = jnp.maximum(t - stime, 0).astype(jnp.float32)
+    cost_benefit = (1.0 - u) * age / (1.0 + u)
+    score = jnp.where(selector_id == GREEDY, greedy, cost_benefit)
     eligible = (state == 2) & (garbage > 0)
     return jnp.where(eligible, score, -jnp.inf)
 
 
-def _segsel_kernel(t_ref, n_ref, nv_ref, stime_ref, state_ref,
-                   score_ref, idx_ref, *, selector):
+def _segsel_kernel(t_ref, sel_ref, n_ref, nv_ref, stime_ref, state_ref,
+                   score_ref, idx_ref):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -53,7 +61,7 @@ def _segsel_kernel(t_ref, n_ref, nv_ref, stime_ref, state_ref,
 
     t = t_ref[0, 0]
     score = _score_tile(n_ref[...], nv_ref[...], stime_ref[...], state_ref[...],
-                        t, selector)
+                        t, sel_ref[0, 0])
     base = i * TILE_ROWS * LANE
     r = jax.lax.broadcasted_iota(jnp.int32, score.shape, 0)
     c = jax.lax.broadcasted_iota(jnp.int32, score.shape, 1)
@@ -71,14 +79,23 @@ def _segsel_kernel(t_ref, n_ref, nv_ref, stime_ref, state_ref,
 @functools.partial(jax.jit, static_argnames=("selector", "interpret"))
 def segment_select(seg_n: jax.Array, seg_nvalid: jax.Array, seg_stime: jax.Array,
                    seg_state: jax.Array, t: jax.Array, *,
-                   selector: str = "cost_benefit", interpret: bool = True):
+                   selector: str = "cost_benefit",
+                   selector_id: jax.Array | None = None,
+                   interpret: bool = True):
     """Victim segment argmax. 1-D int32 inputs of equal length (padded to a
     multiple of 1024 internally; padding scores -inf). Returns (idx, score);
-    idx == -1 when no segment is eligible."""
+    idx == -1 when no segment is eligible.
+
+    ``selector_id`` (traced int32 scalar, 0 = greedy / 1 = cost-benefit)
+    overrides the static ``selector`` string — per-volume selection for
+    heterogeneous fleets, where this kernel is vmapped over volumes."""
     (S,) = seg_n.shape
     tile = TILE_ROWS * LANE
     Sp = ((S + tile - 1) // tile) * tile
     pad = Sp - S
+    if selector_id is None:
+        selector_id = jnp.int32({"greedy": GREEDY, "cost_benefit": COST_BENEFIT}
+                                [selector])
 
     def prep(x):
         x = jnp.pad(x.astype(jnp.int32), (0, pad))
@@ -87,9 +104,10 @@ def segment_select(seg_n: jax.Array, seg_nvalid: jax.Array, seg_stime: jax.Array
     n2, nv2, st2, state2 = map(prep, (seg_n, seg_nvalid, seg_stime, seg_state))
 
     out_score, out_idx = pl.pallas_call(
-        functools.partial(_segsel_kernel, selector=selector),
+        _segsel_kernel,
         grid=(Sp // tile,),
         in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
             pl.BlockSpec((TILE_ROWS, LANE), lambda i: (i, 0)),
             pl.BlockSpec((TILE_ROWS, LANE), lambda i: (i, 0)),
@@ -101,7 +119,8 @@ def segment_select(seg_n: jax.Array, seg_nvalid: jax.Array, seg_stime: jax.Array
         out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32),
                    jax.ShapeDtypeStruct((1, 1), jnp.int32)],
         interpret=interpret,
-    )(t.reshape(1, 1).astype(jnp.int32), n2, nv2, st2, state2)
+    )(t.reshape(1, 1).astype(jnp.int32),
+      jnp.asarray(selector_id, jnp.int32).reshape(1, 1), n2, nv2, st2, state2)
     score = out_score[0, 0]
     idx = out_idx[0, 0]
     return jnp.where(jnp.isfinite(score), idx, -1), score

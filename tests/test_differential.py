@@ -1,0 +1,171 @@
+"""Differential-testing harness: the standing parity gate for jaxsim.
+
+One generated fleet of heterogeneous traces is replayed through four engines:
+
+  1. the numpy reference event loop (`simulator.simulate`),
+  2. single-volume `simulate_jax` (the volume's own scheme-derived config),
+  3. `simulate_fleet` with a fleet of one (homogeneous vmap path),
+  4. the heterogeneous-fleet path (traced per-volume policies, padded class
+     slots, one compiled program for all six scheme × selector combos),
+
+and the three jax paths must agree **bit-identically** — summaries and the
+full final segment/location state — while numpy agrees within the usual
+argmax-tie tolerance. Every future jaxsim change must keep this green.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fleetshard import (encode_policies, matching_single_config,
+                                   simulate_fleet_hetero)
+from repro.core.jaxsim import (SCHEME_NAMES, SELECTOR_NAMES, JaxSimConfig,
+                               _run, default_policy, pad_fleet, simulate_fleet,
+                               simulate_jax)
+from repro.core.simulator import simulate
+from repro.core.tracegen import make_fleet
+
+N = 96
+SEG = 8
+COMBOS = [(sch, sel) for sch in SCHEME_NAMES for sel in SELECTOR_NAMES]
+GPS = [0.12, 0.15, 0.20, 0.15, 0.18, 0.15]      # varied per volume
+NCW = [8, 16, 16, 24, 16, 16]
+BASE = JaxSimConfig(n_lbas=N, segment_size=SEG)
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    """Six heterogeneous-length traces (one per scheme × selector combo), the
+    heterogeneous-fleet replay, and its final batched state."""
+    traces = make_fleet("mixed", len(COMBOS), N, 2 * N, jitter=0.2, seed=13)
+    policy = encode_policies(
+        len(COMBOS),
+        schemes=[sch for sch, _ in COMBOS],
+        selectors=[sel for _, sel in COMBOS],
+        gp_thresholds=GPS, nc_windows=NCW)
+    res, st = simulate_fleet_hetero(traces, BASE, policy, return_state=True)
+    return traces, policy, res, st
+
+
+@pytest.mark.parametrize("i", range(len(COMBOS)),
+                         ids=[f"{sch}-{sel}" for sch, sel in COMBOS])
+def test_hetero_volume_matches_single_jax_bitwise(oracle, i):
+    """Each volume of the mixed-policy fleet is bit-identical to replaying
+    its trace alone under its own scheme-derived config (only the segment
+    pool size is pinned to the fleet's shared value)."""
+    traces, policy, res, _ = oracle
+    cfg_i = matching_single_config(BASE, policy, i)
+    assert (cfg_i.scheme, cfg_i.selector) == COMBOS[i]
+    single = simulate_jax(traces[i], cfg_i)
+    got = res["volumes"][i]
+    assert got["scheme"] == single["scheme"]
+    assert got["selector"] == single["selector"]
+    assert got["user_writes"] == single["user_writes"] == len(traces[i])
+    assert got["gc_writes"] == single["gc_writes"]
+    assert got["wa"] == single["wa"]
+    assert got["reclaimed"] == single["reclaimed"]
+    assert got["free_exhausted"] == single["free_exhausted"] == 0
+    assert got["ell"] == single["ell"]
+    # class counters: the fleet pads the class axis to 6; the volume's own
+    # config only carries its scheme's classes — identical on that prefix,
+    # exactly zero beyond it
+    c = cfg_i.n_classes
+    assert got["class_user_writes"][:c] == single["class_user_writes"]
+    assert got["class_gc_writes"][:c] == single["class_gc_writes"]
+    assert sum(got["class_user_writes"][c:]) == 0
+    assert sum(got["class_gc_writes"][c:]) == 0
+
+
+@pytest.mark.parametrize("i", range(len(COMBOS)),
+                         ids=[f"{sch}-{sel}" for sch, sel in COMBOS])
+def test_hetero_volume_state_matches_single_jax(oracle, i):
+    """Beyond summaries: the full final segment/location state of a
+    mixed-policy volume equals the single-volume replay, array for array."""
+    traces, policy, _, st = oracle
+    cfg_i = matching_single_config(BASE, policy, i)
+    ref = jax.device_get(_run(cfg_i, np.asarray(traces[i], np.int32)))
+    vol = jax.tree_util.tree_map(lambda x: x[i], st)
+    per_class = {"open_sid", "class_user", "class_gc"}
+    policy_keys = {k for k in vol if k.startswith("p_")}
+    for key in ref:
+        if key in policy_keys:
+            continue
+        a, b = np.asarray(vol[key]), np.asarray(ref[key])
+        if key in per_class:  # fleet pads the class axis; compare live prefix
+            a = a[: cfg_i.n_classes]
+        np.testing.assert_array_equal(a, b, err_msg=f"state[{key}] diverged")
+
+
+@pytest.mark.parametrize("i", range(len(COMBOS)),
+                         ids=[f"{sch}-{sel}" for sch, sel in COMBOS])
+def test_hetero_volume_matches_fleet_of_one(oracle, i):
+    """The homogeneous vmap path (fleet of one) agrees bit-identically."""
+    traces, policy, res, _ = oracle
+    cfg_i = matching_single_config(BASE, policy, i)
+    lone = simulate_fleet([traces[i]], cfg_i)["volumes"][0]
+    got = res["volumes"][i]
+    assert got["wa"] == lone["wa"]
+    assert got["gc_writes"] == lone["gc_writes"]
+    assert got["reclaimed"] == lone["reclaimed"]
+    assert got["ell"] == lone["ell"]
+
+
+@pytest.mark.parametrize("i", range(len(COMBOS)),
+                         ids=[f"{sch}-{sel}" for sch, sel in COMBOS])
+def test_hetero_volume_matches_numpy_reference(oracle, i):
+    """The numpy event loop tracks each mixed-policy volume within the
+    usual argmax-tie tolerance (see tests/test_jaxsim.py)."""
+    traces, policy, res, _ = oracle
+    scheme, selector, gp = policy.describe(i)
+    kwargs = {"placement_kwargs": {"nc_window": int(policy.nc_window[i])}} \
+        if scheme == "sepbit" else {}
+    r_np = simulate(traces[i], scheme, segment_size=SEG, n_lbas=N,
+                    selector=selector, gp_threshold=round(gp, 6), **kwargs)
+    tol = 0.08 if selector == "greedy" else 0.03
+    assert res["volumes"][i]["wa"] == pytest.approx(r_np.wa, rel=tol)
+    assert res["volumes"][i]["user_writes"] == r_np.user_writes
+
+
+def test_policy_override_equals_static_config():
+    """simulate_jax's traced-policy override reproduces the static config
+    bit-identically when the static shapes agree — one compiled program can
+    stand in for any policy (what the hypothesis fleet tests lean on)."""
+    tr = make_fleet("zipf_mixture", 1, N, 2 * N, seed=29)[0]
+    padded = dataclasses.replace(BASE, scheme="sepgc", selector="greedy",
+                                 gp_threshold=0.18, class_slots=6,
+                                 n_segments=BASE.s_max)
+    plain = dataclasses.replace(padded, class_slots=None)
+    r_pol = simulate_jax(tr, padded, policy=default_policy(plain))
+    r_static = simulate_jax(tr, plain)
+    assert r_pol["wa"] == r_static["wa"]
+    assert r_pol["gc_writes"] == r_static["gc_writes"]
+    assert r_pol["ell"] == r_static["ell"]
+
+
+def test_hetero_kernel_path_matches_jnp():
+    """Pallas kernels (per-volume selector/scheme scalars, interpret mode)
+    agree bit-identically with the jnp oracle on a mixed-policy fleet."""
+    traces = make_fleet("mixed", 4, N, 2 * N, seed=31)
+    policy = encode_policies(4, schemes=["nosep", "sepgc", "sepbit", "sepbit"],
+                             selectors=["greedy", "cost_benefit",
+                                        "greedy", "cost_benefit"],
+                             gp_thresholds=[0.12, 0.15, 0.15, 0.20])
+    kcfg = dataclasses.replace(BASE, use_kernels=True)
+    rk = simulate_fleet_hetero(traces, kcfg, policy)
+    rj = simulate_fleet_hetero(traces, BASE, policy)
+    for k, j in zip(rk["volumes"], rj["volumes"]):
+        assert k["wa"] == j["wa"]
+        assert k["gc_writes"] == j["gc_writes"]
+        assert k["class_gc_writes"] == j["class_gc_writes"]
+
+
+def test_hetero_fleet_aggregate_consistency(oracle):
+    traces, _, res, _ = oracle
+    f = res["fleet"]
+    assert f["n_volumes"] == len(COMBOS)
+    assert f["user_writes"] == sum(len(t) for t in traces)
+    assert f["gc_writes"] == sum(r["gc_writes"] for r in res["volumes"])
+    assert f["free_exhausted"] == 0
+    assert pad_fleet(traces).shape[0] == len(COMBOS)

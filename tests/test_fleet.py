@@ -110,6 +110,66 @@ def test_alloc_overflow_guard():
     assert simulate_jax(tr, ok)["free_exhausted"] == 0
 
 
+def test_mixed_threshold_fleet_sizing():
+    """Regression (hetero s_max): the shared segment pool must be sized from
+    the sweep's *maximum* GP threshold — steady-state occupancy grows as
+    live/(1-gp), so the highest-threshold cell is the hungriest. A wide
+    mixed-threshold fleet must never exhaust the free pool spuriously, and
+    the shared pool must cover what the hungriest cell's own config would
+    have provisioned."""
+    from repro.core.fleetshard import (encode_policies, hetero_config,
+                                       simulate_fleet_hetero)
+    traces = [zipf_trace(N, 4 * N, alpha=0.6, seed=s) for s in range(4)]
+    pol = encode_policies(4, schemes="sepbit", selectors="cost_benefit",
+                          gp_thresholds=[0.05, 0.45, 0.05, 0.45])
+    cfg = dataclasses.replace(CFG, gp_threshold=0.05)  # naive sizing source
+    cfg_h = hetero_config(cfg, pol)
+    hungriest = dataclasses.replace(cfg, gp_threshold=0.45, class_slots=6)
+    assert cfg_h.n_segments >= hungriest.s_max > cfg.s_max
+    res = simulate_fleet_hetero(traces, cfg, pol)
+    assert res["fleet"]["free_exhausted"] == 0
+    assert all(w >= 1.0 for w in res["fleet"]["per_volume_wa"])
+
+
+def test_sharded_fleet_matches_unsharded():
+    """shard_map over a forced 4-device host mesh must be bit-identical to
+    the single-device fleet run (subprocess: device count is fixed at jax
+    init, so the flag cannot be set in-process)."""
+    import os
+    import subprocess
+    import sys
+    code = """
+import jax, numpy as np
+assert len(jax.devices()) == 4
+from repro.core.jaxsim import JaxSimConfig
+from repro.core.fleetshard import encode_policies, simulate_fleet_hetero
+from repro.core.traces import zipf_trace
+N = 64
+traces = [zipf_trace(N, 2 * N, alpha=1.0, seed=s) for s in range(6)]
+pol = encode_policies(6, schemes=["nosep", "sepgc", "sepbit"] * 2,
+                      selectors=["greedy", "cost_benefit"] * 3,
+                      gp_thresholds=[0.10, 0.15, 0.20] * 2)
+cfg = JaxSimConfig(n_lbas=N, segment_size=8)
+r_sh = simulate_fleet_hetero(traces, cfg, pol)          # 6 vols pad to 8
+r_1d = simulate_fleet_hetero(traces, cfg, pol, shard=False)
+assert r_sh["fleet"]["n_devices"] == 4
+assert r_1d["fleet"]["n_devices"] == 1
+for a, b in zip(r_sh["volumes"], r_1d["volumes"]):
+    assert a["wa"] == b["wa"] and a["gc_writes"] == b["gc_writes"]
+    assert a["ell"] == b["ell"]
+print("SHARDED_PARITY_OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.pathsep.join(
+                   filter(None, [os.path.join(os.path.dirname(__file__),
+                                              os.pardir, "src"),
+                                 os.environ.get("PYTHONPATH", "")])))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "SHARDED_PARITY_OK" in out.stdout, out.stderr[-2000:]
+
+
 def test_gc_select_batch_does_not_stall():
     """Regression (GCPolicy.select): with gc_batch_segments > 1, zero-garbage
     segments tied on score must not crowd eligible victims out of the top-k

@@ -34,6 +34,71 @@ def test_segsel_no_eligible():
     assert int(i) == -1
 
 
+@pytest.mark.parametrize("S", [257, 2048])
+def test_segsel_traced_selector_id(S):
+    """Per-volume selection: the traced selector_id scalar must reproduce
+    both static-selector kernels (heterogeneous fleets vmap over it)."""
+    n = RNG.integers(0, 129, S)
+    nv = np.minimum(RNG.integers(0, 129, S), n)
+    st = RNG.integers(0, 10_000, S)
+    state = RNG.integers(0, 3, S)
+    t = jnp.int32(20_000)
+    args = tuple(map(jnp.asarray, (n, nv, st, state)))
+    for sid, name in ((0, "greedy"), (1, "cost_benefit")):
+        i1, s1 = ops.segment_select(*args, t, selector_id=jnp.int32(sid))
+        i2, s2 = ref.segment_select_ref(*args, t, selector=name)
+        assert int(i1) == int(i2)
+        if int(i2) != -1:
+            np.testing.assert_allclose(float(s1), float(s2), rtol=1e-5)
+
+
+def test_segsel_vmapped_per_volume_selectors():
+    """A batched fleet with mixed selector ids equals the per-volume refs."""
+    V, S = 4, 640
+    n = RNG.integers(0, 129, (V, S))
+    nv = np.minimum(RNG.integers(0, 129, (V, S)), n)
+    st = RNG.integers(0, 10_000, (V, S))
+    state = RNG.integers(0, 3, (V, S))
+    sids = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    t = jnp.full((V,), 20_000, jnp.int32)
+    batched = jax.vmap(lambda *a: ops.segment_select(
+        *a[:-2], a[-2], selector_id=a[-1]))
+    i1, s1 = batched(*map(jnp.asarray, (n, nv, st, state)), t, sids)
+    for v in range(V):
+        i2, _ = ref.segment_select_ref(
+            *map(jnp.asarray, (n[v], nv[v], st[v], state[v])), t[v],
+            selector="greedy" if int(sids[v]) == 0 else "cost_benefit")
+        assert int(i1[v]) == int(i2)
+
+
+@pytest.mark.slow
+def test_segsel_int32_index_edge():
+    """Indices above 2^24 must carry exactly (PR 1: a float32 argmax carry
+    rounded them to even neighbors). A full 2^24-segment interpret-mode scan
+    is infeasible (one python step per (8,128) tile), so the tile is
+    temporarily raised to (4096,128): the grid still spans >2^24 flat
+    indices and the victim sits at an odd index float32 cannot represent."""
+    from repro.kernels import segsel
+    orig = segsel.TILE_ROWS
+    segsel.TILE_ROWS = 4096
+    try:
+        S = (1 << 24) + (1 << 19)
+        hot = (1 << 24) + 1029          # odd => float32 (spacing 2) rounds it
+        n = np.zeros(S, np.int32)
+        nv = np.zeros(S, np.int32)
+        st = np.zeros(S, np.int32)
+        state = np.zeros(S, np.int32)
+        n[hot], nv[hot], state[hot] = 8, 2, 2
+        idx, score = segsel.segment_select(
+            *map(jnp.asarray, (n, nv, st, state)), jnp.int32(10),
+            selector="greedy")
+        assert int(idx) == hot
+        assert float(score) > 0
+    finally:
+        segsel.TILE_ROWS = orig
+        jax.clear_caches()
+
+
 @pytest.mark.parametrize("B", [5, 1024, 2049])
 def test_classify_sweep(B):
     v = RNG.integers(0, 10_000, B)
@@ -44,6 +109,42 @@ def test_classify_sweep(B):
         o1 = ops.classify(*map(jnp.asarray, (v, g, c1, gc)), jnp.float32(ell))
         o2 = ref.classify_ref(*map(jnp.asarray, (v, g, c1, gc)), jnp.float32(ell))
         np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+@pytest.mark.parametrize("scheme_id", [0, 1, 2])
+def test_classify_traced_scheme_id(scheme_id):
+    """Per-volume scheme: 0 collapses to class 0, 1 to {0 user, 1 GC}, 2 to
+    the SepBIT Algorithm-1 classes — against the jnp oracle."""
+    B = 700
+    v = RNG.integers(0, 10_000, B)
+    g = RNG.integers(0, 100_000, B)
+    c1 = RNG.integers(0, 2, B)
+    gc = RNG.integers(0, 2, B)
+    args = tuple(map(jnp.asarray, (v, g, c1, gc)))
+    o1 = ops.classify(*args, jnp.float32(1234.5), scheme_id=jnp.int32(scheme_id))
+    o2 = ref.classify_ref(*args, jnp.float32(1234.5), scheme_id=scheme_id)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    if scheme_id == 0:
+        assert int(np.asarray(o1).max()) == 0
+    elif scheme_id == 1:
+        np.testing.assert_array_equal(np.asarray(o1), gc)
+
+
+def test_classify_vmapped_per_volume_schemes():
+    """Batched classify with a different scheme per volume (the fleet path)."""
+    V, B = 3, 256
+    v = RNG.integers(0, 10_000, (V, B))
+    g = RNG.integers(0, 100_000, (V, B))
+    c1 = RNG.integers(0, 2, (V, B))
+    gc = RNG.integers(0, 2, (V, B))
+    sids = jnp.asarray([0, 1, 2], jnp.int32)
+    ells = jnp.asarray([np.inf, 50.0, 1234.5], jnp.float32)
+    out = jax.vmap(lambda *a: ops.classify(*a[:-1], scheme_id=a[-1]))(
+        *map(jnp.asarray, (v, g, c1, gc)), ells, sids)
+    for i in range(V):
+        want = ref.classify_ref(*map(jnp.asarray, (v[i], g[i], c1[i], gc[i])),
+                                ells[i], scheme_id=int(sids[i]))
+        np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(want))
 
 
 @pytest.mark.parametrize("n", [1000, 1 << 14])

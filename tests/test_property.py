@@ -78,6 +78,79 @@ def test_elastic_plan_feasible(n_hosts_chips, mp):
     assert plan.data >= 1 and plan.model >= 1 and plan.pods >= 1
 
 
+# -- heterogeneous fleet invariants -------------------------------------------
+# Fixed shapes (V, T, n_lbas) so every hypothesis example reuses one compiled
+# program: only the LBA values and the per-volume policy arrays vary.
+
+_FV, _FT, _FN = 3, 48, 16
+
+
+def _fleet_cfg():
+    from repro.core.jaxsim import JaxSimConfig
+    return JaxSimConfig(n_lbas=_FN, segment_size=4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, _FN - 1), min_size=_FV * _FT, max_size=_FV * _FT),
+       st.lists(st.sampled_from(["nosep", "sepgc", "sepbit"]),
+                min_size=_FV, max_size=_FV),
+       st.lists(st.sampled_from(["greedy", "cost_benefit"]),
+                min_size=_FV, max_size=_FV),
+       st.lists(st.sampled_from([0.10, 0.15, 0.25]), min_size=_FV, max_size=_FV))
+def test_hetero_fleet_invariants(lbas, schemes, selectors, gps):
+    """For random traces and random per-volume policies: per-volume write
+    accounting is conserved, no block lands in the sacrificial pad row
+    without the overflow counter recording it, and live rows never exceed
+    segment capacity."""
+    from repro.core.fleetshard import encode_policies, simulate_fleet_hetero
+    traces = np.asarray(lbas, np.int32).reshape(_FV, _FT)
+    policy = encode_policies(_FV, schemes=schemes, selectors=selectors,
+                             gp_thresholds=gps)
+    res, state = simulate_fleet_hetero(traces, _fleet_cfg(), policy,
+                                       return_state=True)
+    pad_row = state["seg_n"].shape[1] - 1
+    for i, vol in enumerate(res["volumes"]):
+        assert vol["user_writes"] == _FT
+        assert vol["wa"] >= 1.0
+        assert sum(vol["class_user_writes"]) == _FT
+        assert sum(vol["class_gc_writes"]) == vol["gc_writes"]
+        # pad-row writes only ever happen under recorded free-pool exhaustion
+        if vol["free_exhausted"] == 0:
+            assert int(state["seg_n"][i, pad_row]) == 0
+            # conservation: exactly the written LBAs are live, once each
+            assert int(state["seg_nvalid"][i].sum()) == len(set(traces[i].tolist()))
+        assert int(state["seg_n"][i, :pad_row].max()) <= 4
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.data())
+def test_hetero_fleet_matches_single_volume(data):
+    """A heterogeneous fleet's per-volume results equal single-volume runs
+    with the matching config (traced-policy override, same static shapes)."""
+    from repro.core.fleetshard import (encode_policies, hetero_config,
+                                       simulate_fleet_hetero)
+    from repro.core.jaxsim import simulate_jax
+    lbas = data.draw(st.lists(st.integers(0, _FN - 1),
+                              min_size=_FV * _FT, max_size=_FV * _FT))
+    schemes = data.draw(st.lists(st.sampled_from(["nosep", "sepgc", "sepbit"]),
+                                 min_size=_FV, max_size=_FV))
+    selectors = data.draw(st.lists(st.sampled_from(["greedy", "cost_benefit"]),
+                                   min_size=_FV, max_size=_FV))
+    traces = np.asarray(lbas, np.int32).reshape(_FV, _FT)
+    policy = encode_policies(_FV, schemes=schemes, selectors=selectors,
+                             gp_thresholds=0.15)
+    cfg = _fleet_cfg()
+    res = simulate_fleet_hetero(traces, cfg, policy)
+    # the fleet's shared static config + traced per-volume policy => one
+    # compiled single-volume program serves every scheme/selector drawn
+    cfg_single = hetero_config(cfg, policy)
+    for i in range(_FV):
+        single = simulate_jax(traces[i], cfg_single, policy=policy.volume(i))
+        assert res["volumes"][i]["wa"] == single["wa"]
+        assert res["volumes"][i]["gc_writes"] == single["gc_writes"]
+        assert res["volumes"][i]["class_user_writes"] == single["class_user_writes"]
+
+
 @given(st.lists(st.integers(1, 200), min_size=4, max_size=60))
 def test_logkv_tables_consistent(page_counts):
     """Whatever the traffic, page tables always point at live pages of the
