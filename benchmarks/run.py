@@ -34,8 +34,16 @@ def _pool(full):
     return pool if full else pool[:6]
 
 
-SEL_SCHEMES = ["nosep", "sepgc", "fk", "sepbit", "uw", "gw", "dac", "sfs",
-               "ml", "eti", "mq", "sfr", "fadac", "warcip"]
+def _all_schemes():
+    """Every registered placement scheme (numpy backend), registry order."""
+    from repro.core.placement import registry
+    return [sd.name for sd in registry.all_schemes()]
+
+
+def _jax_schemes():
+    """Every scheme with a JAX triple — the fleet/sweep scheme axis."""
+    from repro.core.jaxsim import SCHEME_NAMES
+    return list(SCHEME_NAMES)
 
 
 def exp1_selection(full=False):
@@ -44,7 +52,7 @@ def exp1_selection(full=False):
     from repro.core.volumes import overall_wa
     pool = _pool(full)
     for sel in ("greedy", "cost_benefit"):
-        for scheme in SEL_SCHEMES:
+        for scheme in _all_schemes():
             us, rs = _timed(lambda: [simulate(tr, scheme, segment_size=128,
                                               selector=sel) for _, tr in pool])
             _row(f"exp1/{sel}/{scheme}", us, f"WA={overall_wa(rs):.4f}")
@@ -275,24 +283,34 @@ def fleet(full=False, n_volumes=None, kind="mixed"):
 
 
 def sweep(full=False, n_volumes=None, kind="mixed", schemes=None,
-          selectors=None, gp_grid=None, use_kernels=False):
+          selectors=None, gp_grid=None, use_kernels=False, json_path=None):
     """Heterogeneous-config fleet sweep: one compiled program replays a
     (scheme × selector × gp_threshold) policy grid, every volume running its
     own placement policy via traced per-volume knobs, sharded over devices
     when more than one is visible. Each grid cell replays the same tiled
-    workloads, so per-cell WA rows compare policies on equal traffic."""
+    workloads, so per-cell WA rows compare policies on equal traffic.
+
+    The default scheme axis is *every* scheme with a registered JAX triple
+    (the paper's Exp#1/#3 zoo on the fleet path); ``--schemes`` filters it.
+    ``--json OUT.json`` writes a per-cell artifact (scheme, selector, gp,
+    WA mean ± 95% CI across the cell's volumes) for plotting WA-vs-gp
+    curves per scheme."""
     from repro.core.fleetshard import simulate_fleet_sweep
     from repro.core.jaxsim import JaxSimConfig
     from repro.core.tracegen import tiled_fleet
-    schemes = schemes or ["nosep", "sepgc", "sepbit"]
+    schemes = schemes or _jax_schemes()
     selectors = selectors or ["greedy", "cost_benefit"]
     gp_grid = gp_grid or [0.10, 0.15, 0.20]
     n_cells = len(schemes) * len(selectors) * len(gp_grid)
-    V = n_volumes or (n_cells * (8 if full else 4))
+    V = n_volumes or (n_cells * (4 if full else 2))
     per_cell = max(V // n_cells, 1)
     V = per_cell * n_cells
-    n = 256 if full else 128
-    traces = tiled_fleet(kind, n_cells, per_cell, n, 3 * n, jitter=0.25, seed=17)
+    # n_lbas = 512 is the smallest scale where the paper's Exp#1/#3 WA
+    # ordering (FK <= SepBIT <= temperature ladders <= NoSep at the default
+    # gp = 0.15) is reproduced — below it the ladder schemes' six open
+    # segments are too large a fraction of the working set
+    n = 512
+    traces = tiled_fleet(kind, n_cells, per_cell, n, 4 * n, jitter=0.25, seed=17)
     cfg = JaxSimConfig(n_lbas=n, segment_size=32, use_kernels=use_kernels)
     us, res = _timed(lambda: simulate_fleet_sweep(
         traces, cfg, schemes=schemes, selectors=selectors, gp_thresholds=gp_grid))
@@ -304,7 +322,8 @@ def sweep(full=False, n_volumes=None, kind="mixed", schemes=None,
     for row in res["sweep"]:
         _row(f"sweep/{row['scheme']}/{row['selector']}/"
              f"gp{int(round(100 * row['gp_threshold']))}", 0,
-             f"WA={row['wa']:.4f};median={row['median_wa']:.4f};"
+             f"WA={row['wa']:.4f};mean={row['wa_mean']:.4f}"
+             f"±{row['wa_ci95']:.4f};median={row['median_wa']:.4f};"
              f"n={row['n_volumes']}")
     best = min(res["sweep"], key=lambda r: r["wa"])
     worst = max(res["sweep"], key=lambda r: r["wa"])
@@ -312,6 +331,22 @@ def sweep(full=False, n_volumes=None, kind="mixed", schemes=None,
          f"{best['scheme']}/{best['selector']}/gp{best['gp_threshold']:.2f};"
          f"WA={best['wa']:.4f};reduction_vs_worst="
          f"{100 * (1 - best['wa'] / worst['wa']):.1f}%")
+    if json_path:
+        cells = [{k: row[k] for k in
+                  ("scheme", "selector", "gp_threshold", "n_volumes",
+                   "user_writes", "gc_writes", "wa", "wa_mean", "wa_ci95",
+                   "median_wa", "per_volume_wa", "free_exhausted")}
+                 for row in res["sweep"]]
+        artifact = {
+            "workload": kind, "n_lbas": n, "segment_size": 32,
+            "n_updates": 4 * n, "volumes_per_cell": per_cell,
+            "n_volumes": V, "schemes": schemes, "selectors": selectors,
+            "gp_thresholds": gp_grid, "n_devices": f["n_devices"],
+            "fleet_wa": f["wa"], "wall_us": us, "cells": cells,
+        }
+        with open(json_path, "w") as fp:
+            json.dump(artifact, fp, indent=1)
+        _row(f"sweep/{kind}/json", 0, json_path)
 
 
 def kernels(full=False):
@@ -375,13 +410,17 @@ def main() -> None:
     ap.add_argument("--workload", default="mixed",
                     help="fleet/sweep mode: mixed|zipf_mixture|shifting_hotspot|msr_burst")
     ap.add_argument("--schemes", default=None,
-                    help="sweep mode: comma-separated schemes (default nosep,sepgc,sepbit)")
+                    help="sweep mode: comma-separated scheme filter "
+                         "(default: every JAX-registered scheme)")
     ap.add_argument("--selectors", default=None,
                     help="sweep mode: comma-separated selectors")
     ap.add_argument("--gp-grid", default=None,
                     help="sweep mode: comma-separated GP thresholds (default 0.10,0.15,0.20)")
     ap.add_argument("--use-kernels", action="store_true",
                     help="sweep mode: route hot paths through the Pallas kernels")
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="sweep mode: write the per-cell artifact "
+                         "(scheme/selector/gp, WA mean ± CI) to this path")
     args, _ = ap.parse_known_args()
     print("name,us_per_call,derived")
     benches = dict(BENCHES)  # bind fleet flags once, wherever it's dispatched
@@ -392,7 +431,7 @@ def main() -> None:
         schemes=args.schemes.split(",") if args.schemes else None,
         selectors=args.selectors.split(",") if args.selectors else None,
         gp_grid=[float(x) for x in args.gp_grid.split(",")] if args.gp_grid else None,
-        use_kernels=args.use_kernels)
+        use_kernels=args.use_kernels, json_path=args.json)
     if args.mode in ("fleet", "sweep"):
         benches[args.mode](full=args.full)
         return

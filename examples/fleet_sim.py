@@ -21,7 +21,8 @@ import time
 import numpy as np
 
 from repro.core.fleetshard import simulate_fleet_sweep
-from repro.core.jaxsim import JaxSimConfig, pad_fleet, simulate_fleet
+from repro.core.jaxsim import (SCHEME_NAMES, JaxSimConfig, pad_fleet,
+                               simulate_fleet)
 from repro.core.tracegen import FLEET_GENERATORS, make_fleet, tiled_fleet
 
 
@@ -68,8 +69,7 @@ def main():
     ap.add_argument("--jitter", type=float, default=0.25,
                     help="per-volume trace-length spread (0 = uniform)")
     ap.add_argument("--segment", type=int, default=32)
-    ap.add_argument("--scheme", default="sepbit",
-                    choices=["sepbit", "sepgc", "nosep"])
+    ap.add_argument("--scheme", default="sepbit", choices=list(SCHEME_NAMES))
     ap.add_argument("--selector", default="cost_benefit",
                     choices=["greedy", "cost_benefit"])
     ap.add_argument("--seed", type=int, default=0)
@@ -79,8 +79,9 @@ def main():
     ap.add_argument("--sweep", action="store_true",
                     help="heterogeneous policy-grid sweep (one program, every "
                          "volume its own scheme/selector/gp)")
-    ap.add_argument("--schemes", default="nosep,sepgc,sepbit",
-                    help="sweep: comma-separated schemes")
+    ap.add_argument("--schemes", default=",".join(SCHEME_NAMES),
+                    help="sweep: comma-separated schemes (default: every "
+                         "JAX-registered scheme)")
     ap.add_argument("--selectors", default="greedy,cost_benefit",
                     help="sweep: comma-separated selectors")
     ap.add_argument("--gp-grid", default="0.10,0.15,0.20",

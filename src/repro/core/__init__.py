@@ -3,11 +3,12 @@ baselines, GC policies, and trace-driven + JAX-native simulators."""
 
 from .blockstore import INF, Segment, Volume
 from .gc import GCPolicy, SELECTORS
-from .placement import SCHEMES, Placement, make_placement
+from .placement import (SCHEMES, Placement, SchemeDef, make_placement,
+                        registry)
 from .simulator import SimResult, annotate_next_write, simulate
 
 __all__ = [
     "INF", "Segment", "Volume", "GCPolicy", "SELECTORS",
-    "SCHEMES", "Placement", "make_placement",
+    "SCHEMES", "Placement", "SchemeDef", "registry", "make_placement",
     "SimResult", "annotate_next_write", "simulate",
 ]

@@ -36,7 +36,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from .jaxsim import (JaxSimConfig, SCHEME_CLASSES, SCHEME_IDS, SCHEME_NAMES,
                      SELECTOR_IDS, SELECTOR_NAMES, _run_fleet, coerce_fleet,
-                     fleet_body, summarize_fleet)
+                     coerce_fleet_annotations, fleet_annotations, fleet_body,
+                     summarize_fleet)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -177,7 +178,7 @@ def _sharded_runner(cfg: JaxSimConfig, masked: bool, mesh: Mesh):
     body runs collective-free on each device's slice of the fleet."""
     body = functools.partial(fleet_body, cfg, masked)
     return jax.jit(shard_map(body, mesh=mesh,
-                             in_specs=(P("fleet"), P("fleet")),
+                             in_specs=(P("fleet"), P("fleet"), P("fleet")),
                              out_specs=P("fleet"), check_rep=False))
 
 
@@ -201,6 +202,7 @@ def simulate_fleet_hetero(traces, cfg: JaxSimConfig, policy: FleetPolicy, *,
     cfg_h = hetero_config(cfg, policy)
     masked = bool((padded < 0).any())
     pol_arrays = policy.as_state_arrays()
+    nxts = fleet_annotations(padded, policy.scheme_id)
 
     if mesh is None and shard:
         mesh = fleet_mesh()
@@ -209,15 +211,21 @@ def simulate_fleet_hetero(traces, cfg: JaxSimConfig, policy: FleetPolicy, *,
         pad_rows = (-V) % d
         if pad_rows:  # replicate the last volume; dropped after the run
             padded = np.concatenate([padded, np.repeat(padded[-1:], pad_rows, 0)])
+            if nxts is not None:
+                nxts = np.concatenate([nxts, np.repeat(nxts[-1:], pad_rows, 0)])
             pol_arrays = {k: jnp.concatenate(
                 [v, jnp.repeat(v[-1:], pad_rows, 0)]) for k, v in pol_arrays.items()}
-        st = _sharded_runner(cfg_h, masked, mesh)(jnp.asarray(padded), pol_arrays)
+        st = _sharded_runner(cfg_h, masked, mesh)(
+            jnp.asarray(padded), coerce_fleet_annotations(nxts, padded.shape),
+            pol_arrays)
         st = jax.block_until_ready(st)
         if pad_rows:
             st = jax.tree_util.tree_map(lambda x: x[:V], st)
     else:
         st = jax.block_until_ready(
-            _run_fleet(cfg_h, jnp.asarray(padded), masked, pol_arrays))
+            _run_fleet(cfg_h, jnp.asarray(padded),
+                       coerce_fleet_annotations(nxts, padded.shape), masked,
+                       pol_arrays))
     res = summarize_fleet(cfg_h, st, V)
     res["fleet"]["n_devices"] = 1 if mesh is None else mesh.size
     if return_state:
@@ -226,6 +234,21 @@ def simulate_fleet_hetero(traces, cfg: JaxSimConfig, policy: FleetPolicy, *,
 
 
 # -- sweep aggregation ---------------------------------------------------------
+
+# two-sided 95% Student-t critical values by degrees of freedom (df = n - 1);
+# the default sweep runs only a handful of volumes per cell, where the
+# normal 1.96 would understate the interval ~6.5x at n = 2
+_T95 = {1: 12.706, 2: 4.303, 3: 3.182, 4: 2.776, 5: 2.571, 6: 2.447,
+        7: 2.365, 8: 2.306, 9: 2.262, 10: 2.228, 12: 2.179, 15: 2.131,
+        20: 2.086, 30: 2.042}
+
+
+def _t95(df: int) -> float:
+    """Nearest tabulated value at or below ``df`` — uniformly conservative
+    (wider CI) between table entries and past the df = 30 edge."""
+    if df <= 0:
+        return float("inf")
+    return _T95[max(k for k in _T95 if k <= df)]
 
 def sweep_summary(res: dict, policy: FleetPolicy,
                   cells: list[tuple] | None = None) -> list[dict]:
@@ -259,7 +282,14 @@ def sweep_summary(res: dict, policy: FleetPolicy,
     for key in order:
         g = groups[key]
         g["wa"] = (g["user_writes"] + g["gc_writes"]) / max(g["user_writes"], 1)
-        g["median_wa"] = float(np.median(g["per_volume_wa"]))
+        wa = np.asarray(g["per_volume_wa"], dtype=np.float64)
+        g["median_wa"] = float(np.median(wa))
+        g["wa_mean"] = float(wa.mean())
+        # Student-t 95% CI over the cell's volumes (identical workloads per
+        # cell, so this is pure policy-response spread); 0 for n = 1
+        g["wa_ci95"] = (float(_t95(len(wa) - 1) * wa.std(ddof=1)
+                              / np.sqrt(len(wa)))
+                        if len(wa) > 1 else 0.0)
         rows.append(g)
     return rows
 

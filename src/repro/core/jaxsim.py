@@ -9,9 +9,18 @@ per-write state transitions are static-shape scatters; GC's variable-length
 rewrite work is bounded by the segment size and expressed with masked
 scatters (`mode="drop"`).
 
-Supported schemes: sepbit / sepgc / nosep (the paper's core + the two
-structural baselines). Selectors: greedy / cost_benefit. Validated against
-the numpy simulator in tests/test_jaxsim.py.
+Schemes come from the placement registry (`core/placement/registry.py`):
+every scheme with a registered JAX triple — nosep / sepgc / sepbit plus the
+ported baselines fk / dac / ml / sfs and the Exp#4 ablations uw / gw — runs
+on this engine. Per-write dispatch is `jax.lax.switch` on the traced
+per-volume scheme id over the registered branch stack; each scheme's
+mutable tables (DAC's region ladder, MultiLog's counters, FK's pending-BIT
+table, ...) live in a per-scheme slice of the state pytree (keys
+``sch_<name>_*``), initialized by the registry triple's `init_state`.
+Future-knowledge schemes additionally consume a per-request BIT annotation
+(`fk_annotations`, threaded through the scan alongside the LBA stream).
+Selectors: greedy / cost_benefit. Validated against the numpy simulator in
+tests/test_jaxsim.py and tests/test_differential.py.
 
 Fleet mode (`simulate_fleet`): the per-volume state dict is a pytree that
 `jax.vmap` maps over a leading fleet axis, so one compiled program replays N
@@ -28,12 +37,13 @@ Heterogeneous-config fleets: the per-volume policy knobs (scheme, selector,
 GP threshold, nc window) are *traced* scalars carried inside the state pytree
 ("p_scheme", "p_selector", "p_gp", "p_ncw", "p_classes"), not Python-static
 config, so one compiled program can replay a fleet where every volume runs a
-different placement policy. Scheme/selector dispatch is `jnp.where` over the
-policy ids; the class axis is padded to ``cfg.n_class_slots`` (6 for any
-fleet containing SepBIT) with inactive classes masked to exact no-ops, so a
-volume's replay stays bit-identical to a single-volume run of its own
-scheme-derived config. `core/fleetshard.py` builds the per-volume policy
-arrays and shards the fleet axis across devices.
+different placement policy. Scheme dispatch is `jax.lax.switch` over the
+registry's branch stack and selector dispatch `jnp.where` over the two
+selector ids; the class axis is padded to ``cfg.n_class_slots`` (the widest
+scheme present) with inactive classes masked to exact no-ops, so a volume's
+replay stays bit-identical to a single-volume run of its own scheme-derived
+config. `core/fleetshard.py` builds the per-volume policy arrays and shards
+the fleet axis across devices.
 """
 
 from __future__ import annotations
@@ -45,13 +55,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .placement import registry as scheme_registry
+from .placement.jax_schemes import NOBIT
+
 BIG = jnp.int32(2 ** 30)
 
-# Policy-id encodings for the traced per-volume knobs. Scheme ids are ordered
-# by class count so "max id present" also names the widest class axis.
-SCHEME_IDS = {"nosep": 0, "sepgc": 1, "sepbit": 2}
-SCHEME_NAMES = tuple(SCHEME_IDS)
-SCHEME_CLASSES = (1, 2, 6)              # classes used by each scheme id
+# Policy-id encodings for the traced per-volume knobs. The scheme tables are
+# views of the placement registry (`placement/registry.py`) — dense ids in
+# JAX-registration order; registering a new scheme extends them automatically.
+_JAX_SCHEMES = scheme_registry.jax_schemes()
+SCHEME_IDS = {sd.name: i for i, (sd, _) in enumerate(_JAX_SCHEMES)}
+SCHEME_NAMES = tuple(sd.name for sd, _ in _JAX_SCHEMES)
+SCHEME_CLASSES = tuple(sd.n_classes for sd, _ in _JAX_SCHEMES)
+SCHEME_REQUIRES_FUTURE = tuple(sd.requires_future for sd, _ in _JAX_SCHEMES)
 SELECTOR_IDS = {"greedy": 0, "cost_benefit": 1}
 SELECTOR_NAMES = tuple(SELECTOR_IDS)
 MAX_CLASSES = max(SCHEME_CLASSES)
@@ -70,10 +86,12 @@ class JaxSimConfig:
     use_kernels: bool = False               # route hot paths via Pallas kernels
     kernels_interpret: bool = True          # interpret mode (CPU); False on TPU
     class_slots: int | None = None          # pad the class axis (hetero fleets)
+    sfs_resample: int = 4096                # SFS quantile refresh period
+    #                                         (= numpy SFS resample_every)
 
     @property
     def n_classes(self) -> int:
-        return {"sepbit": 6, "sepgc": 2, "nosep": 1}[self.scheme]
+        return scheme_registry.get(self.scheme).n_classes
 
     @property
     def n_class_slots(self) -> int:
@@ -100,10 +118,18 @@ class JaxSimConfig:
         return self.s_max + 1
 
 
+def _scheme_id_or_raise(scheme: str) -> int:
+    if scheme not in SCHEME_IDS:
+        raise ValueError(
+            f"scheme {scheme!r} has no JAX implementation (numpy-only); "
+            f"JAX schemes: {SCHEME_NAMES}")
+    return SCHEME_IDS[scheme]
+
+
 def default_policy(cfg: JaxSimConfig) -> dict:
     """Traced-policy scalars equivalent to the static knobs in ``cfg``."""
     return {
-        "p_scheme": jnp.int32(SCHEME_IDS[cfg.scheme]),
+        "p_scheme": jnp.int32(_scheme_id_or_raise(cfg.scheme)),
         "p_selector": jnp.int32(SELECTOR_IDS[cfg.selector]),
         "p_gp": jnp.float32(cfg.gp_threshold),
         "p_ncw": jnp.int32(cfg.nc_window),
@@ -157,6 +183,15 @@ def init_state(cfg: JaxSimConfig, policy: dict | None = None) -> dict:
         "class_user": jnp.zeros(C, jnp.int32),
         "class_gc": jnp.zeros(C, jnp.int32),
     }
+    # every registered JAX scheme contributes its state slice (sch_<name>_*)
+    # to every volume — heterogeneous fleets need one pytree structure, and
+    # inactive schemes' slices are never touched (their branch never runs)
+    for sd, jp in _JAX_SCHEMES:
+        extra = jp.init_state(cfg)
+        clash = set(extra) & set(state)
+        if clash:
+            raise ValueError(f"scheme {sd.name!r} state keys collide: {clash}")
+        state.update(extra)
     state.update({k: jnp.asarray(v) for k, v in policy.items()})
     # the first p_classes segments start open, one per live class; padded
     # class slots leave their row in the free pool (as it would be for a
@@ -168,25 +203,45 @@ def init_state(cfg: JaxSimConfig, policy: dict | None = None) -> dict:
     return state
 
 
-# -- placement rules (dispatched on the traced per-volume policy ids) ---------
+# -- placement rules (lax.switch over the registry's branch stack) ------------
 
-def _user_class(st, v):
-    sepbit = jnp.where(v.astype(jnp.float32) < st["ell"], 0, 1).astype(jnp.int32)
-    return jnp.where(st["p_scheme"] == SCHEME_IDS["sepbit"], sepbit, 0)
+def _user_class_dispatch(cfg: JaxSimConfig, st, lba, v, nxt):
+    """Class for one user write under the volume's traced scheme id.
+
+    Each registered scheme is one switch branch `(st, lba, v, nxt) ->
+    (cls, st)`; branches update only their own ``sch_<name>_*`` state slice,
+    so every branch returns an identically-structured state dict and the
+    switch output is well-formed. ``nxt`` is the request's BIT annotation
+    (consumed by future-knowledge schemes, ignored elsewhere)."""
+    branches = tuple(functools.partial(jp.user_class, cfg)
+                     for _, jp in _JAX_SCHEMES)
+    return jax.lax.switch(st["p_scheme"], branches, st, lba, v, nxt)
 
 
-def _gc_classes(st, victim_cls, g):
-    """Class per rewritten block (Algorithm 1 GCWrite), vectorized over the
-    victim's slots. ``g`` = age = t - last user write time."""
-    gf = g.astype(jnp.float32)
-    ell = st["ell"]
-    by_age = jnp.where(gf < 4 * ell, 3, jnp.where(gf < 16 * ell, 4, 5))
-    sepbit = jnp.where(victim_cls == 0, 2, by_age)
-    sepgc = jnp.full(g.shape, 1, jnp.int32)
-    return jnp.where(
-        st["p_scheme"] == SCHEME_IDS["sepbit"], sepbit,
-        jnp.where(st["p_scheme"] == SCHEME_IDS["sepgc"], sepgc, 0),
-    ).astype(jnp.int32)
+def _gc_class_dispatch(cfg: JaxSimConfig, st, victim_cls, lba_v, utime_v,
+                       valid_v):
+    """Classes for every slot of a GC victim (Algorithm 1 GCWrite and its
+    baseline counterparts), vectorized over the victim's slots.
+
+    With ``cfg.use_kernels`` the stateless (elementwise) schemes are batched
+    through the Pallas classify kernel — evaluated once, selected by the
+    traced scheme id inside the kernel — and their switch branches just
+    return that result; stateful schemes always classify via their jnp
+    branch (they need their per-LBA tables, and must update them)."""
+    g = st["t"] - utime_v
+    ew = None
+    if cfg.use_kernels:
+        from_c1 = jnp.full(g.shape, 0, jnp.int32) + (victim_cls == 0)
+        ew = _classify_kernel_call(cfg, st, jnp.zeros_like(g), g, from_c1,
+                                   jnp.ones_like(g))
+    branches = []
+    for _, jp in _JAX_SCHEMES:
+        if ew is not None and jp.elementwise is not None:
+            branches.append(lambda st_, *a, _ew=ew: (_ew, st_))
+        else:
+            branches.append(functools.partial(jp.gc_classes, cfg))
+    return jax.lax.switch(st["p_scheme"], tuple(branches), st, victim_cls,
+                          lba_v, utime_v, valid_v, g)
 
 
 def _scores(st):
@@ -262,15 +317,12 @@ def _gc_once(cfg: JaxSimConfig, st, victim):
     ell = jnp.where(refresh, ell_tot / jnp.maximum(nc, 1), st["ell"])
     nc = jnp.where(refresh, 0, nc)
     ell_tot = jnp.where(refresh, 0.0, ell_tot)
-    st_ell = dict(st, ell=ell)
 
-    g = st["t"] - utime_v
-    if cfg.use_kernels:
-        from_c1 = jnp.full(g.shape, 0, jnp.int32) + (victim_cls == 0)
-        gc_cls = _classify_kernel_call(cfg, st_ell, jnp.zeros_like(g), g,
-                                       from_c1, jnp.ones_like(g))
-    else:
-        gc_cls = _gc_classes(st_ell, victim_cls, g)
+    # classify (and let stateful schemes update their tables) under the
+    # refreshed ell; the victim's dead slots are masked out of the appends
+    st = dict(st, ell=ell, ell_tot=ell_tot, nc=nc)
+    gc_cls, st = _gc_class_dispatch(cfg, st, victim_cls, lba_v, utime_v,
+                                    valid_v)
     classes = jnp.where(valid_v, gc_cls, -1)
 
     free_ids = _alloc_free_ids(cfg, st, C)
@@ -398,7 +450,7 @@ def _maybe_gc(cfg: JaxSimConfig, st):
 
 # -- per-user-write step -------------------------------------------------------
 
-def _user_step(cfg: JaxSimConfig, st, lba):
+def _user_step(cfg: JaxSimConfig, st, lba, nxt):
     s, C, n = cfg.segment_size, cfg.n_class_slots, cfg.n_lbas
     t = st["t"]
 
@@ -416,7 +468,7 @@ def _user_step(cfg: JaxSimConfig, st, lba):
     # single element to a full (8, 128) tile every scan step, so the scalar
     # jnp dispatch serves both modes (bit-identical to the kernel; the
     # segment-wide GC batch in _gc_once is where the kernel earns its tile)
-    cls = _user_class(st, v)
+    cls, st = _user_class_dispatch(cfg, st, lba, v, nxt)
     sid = st["open_sid"][cls]
     off = st["seg_n"][sid]
     # mode="drop": off can reach s only on the over-capacity pad row
@@ -457,14 +509,70 @@ def _user_step(cfg: JaxSimConfig, st, lba):
     return _maybe_gc(cfg, st)
 
 
+# -- BIT annotations (future-knowledge schemes) -------------------------------
+
+def fk_annotations(trace) -> np.ndarray:
+    """Per-request BIT annotation for future-knowledge schemes: the index of
+    the next write to the same LBA, clipped to the int32 ``NOBIT`` sentinel
+    when there is none. Threaded through the scan alongside the LBA stream
+    (`simulator.annotate_next_write` is the host-side producer)."""
+    from .simulator import annotate_next_write
+    trace = np.asarray(trace, dtype=np.int64)
+    nxt = annotate_next_write(trace, 0)
+    return np.minimum(nxt, NOBIT).astype(np.int32)
+
+
+def _policy_scheme_id(cfg: JaxSimConfig, policy: dict | None) -> int:
+    if policy is None:
+        return _scheme_id_or_raise(cfg.scheme)
+    return int(np.asarray(policy["p_scheme"]))
+
+
+def _single_annotations(trace: np.ndarray, cfg: JaxSimConfig,
+                        policy: dict | None) -> np.ndarray | None:
+    if SCHEME_REQUIRES_FUTURE[_policy_scheme_id(cfg, policy)]:
+        return fk_annotations(trace)
+    return None
+
+
+def fleet_annotations(padded: np.ndarray, scheme_ids) -> np.ndarray | None:
+    """(V, T) BIT annotations for a (possibly padded) fleet: rows whose
+    scheme needs future knowledge are annotated per volume (pad entries are
+    -1, never a real LBA, so real requests' links are unaffected and pad
+    steps' values are discarded by the mask); all other rows are ``NOBIT``.
+    Returns None when *no* volume needs future knowledge — callers then
+    substitute a device-side fill (:func:`coerce_fleet_annotations`) and
+    skip materializing/transferring a trace-sized host matrix."""
+    need = [bool(SCHEME_REQUIRES_FUTURE[int(sid)])
+            for sid in np.asarray(scheme_ids)]
+    if not any(need):
+        return None
+    out = np.full(padded.shape, NOBIT, dtype=np.int32)
+    for i, row_needs in enumerate(need):
+        if row_needs:
+            out[i] = fk_annotations(padded[i])
+    return out
+
+
+def coerce_fleet_annotations(nxts, shape) -> jnp.ndarray:
+    """Device array for the scan's annotation stream; NOBIT fill for None."""
+    if nxts is None:
+        return jnp.full(shape, NOBIT, jnp.int32)
+    return jnp.asarray(nxts, jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnums=0)
-def _run(cfg: JaxSimConfig, trace: jnp.ndarray, policy: dict | None = None) -> dict:
+def _run(cfg: JaxSimConfig, trace: jnp.ndarray, policy: dict | None = None,
+         nxt: jnp.ndarray | None = None) -> dict:
     st = init_state(cfg, policy)
+    if nxt is None:
+        nxt = jnp.full(trace.shape, NOBIT, jnp.int32)
 
-    def step(st, lba):
-        return _user_step(cfg, st, lba), None
+    def step(st, x):
+        lba, nx = x
+        return _user_step(cfg, st, lba, nx), None
 
-    st, _ = jax.lax.scan(step, st, trace)
+    st, _ = jax.lax.scan(step, st, (trace, jnp.asarray(nxt, jnp.int32)))
     return st
 
 
@@ -494,9 +602,13 @@ def simulate_jax(trace: np.ndarray, cfg: JaxSimConfig,
     ``policy`` optionally overrides the config's placement knobs with traced
     scalars (see :func:`default_policy`) — same compiled program for every
     policy, used by the differential harness to pit one static config shape
-    against many policies without recompiling."""
-    trace = jnp.asarray(np.asarray(trace, dtype=np.int32))
-    st = jax.block_until_ready(_run(cfg, trace, policy))
+    against many policies without recompiling. Future-knowledge schemes get
+    their BIT annotations computed here (host-side) and threaded in."""
+    trace_np = np.asarray(trace, dtype=np.int32)
+    nxt = _single_annotations(trace_np, cfg, policy)
+    st = jax.block_until_ready(
+        _run(cfg, jnp.asarray(trace_np), policy,
+             None if nxt is None else jnp.asarray(nxt)))
     return _summary(cfg, jax.device_get(st))
 
 
@@ -513,10 +625,10 @@ def pad_fleet(traces) -> np.ndarray:
     return out
 
 
-def _masked_step(cfg: JaxSimConfig, st, lba):
+def _masked_step(cfg: JaxSimConfig, st, lba, nxt):
     """One user write, or a state-preserving no-op for pad entries (-1)."""
     active = lba >= 0
-    new = _user_step(cfg, st, jnp.maximum(lba, 0))
+    new = _user_step(cfg, st, jnp.maximum(lba, 0), nxt)
     return jax.tree_util.tree_map(lambda a, b: jnp.where(active, a, b), new, st)
 
 
@@ -527,29 +639,31 @@ def broadcast_policies(cfg: JaxSimConfig, n_volumes: int) -> dict:
 
 
 def fleet_body(cfg: JaxSimConfig, masked: bool, traces: jnp.ndarray,
-               policies: dict) -> dict:
+               nxts: jnp.ndarray, policies: dict) -> dict:
     """The (un-jitted) fleet replay: vmapped scan over a leading volume axis.
 
     ``policies`` is a dict of (V,)-shaped traced policy arrays (see
     :func:`default_policy` for the keys) — each volume runs its own scheme /
-    selector / GP threshold / nc window. Exposed un-jitted so
+    selector / GP threshold / nc window. ``nxts`` is the (V, T) BIT
+    annotation matrix (see :func:`fleet_annotations`). Exposed un-jitted so
     `core/fleetshard.py` can wrap it in `shard_map` over the fleet axis."""
     st = jax.vmap(lambda pol: init_state(cfg, pol))(policies)
     # ``masked`` is static: uniform-length fleets (no -1 padding anywhere)
     # skip the per-step state select entirely.
     inner = _masked_step if masked else _user_step
 
-    def step(st, lbas):
-        return jax.vmap(functools.partial(inner, cfg))(st, lbas), None
+    def step(st, x):
+        lbas, nxs = x
+        return jax.vmap(functools.partial(inner, cfg))(st, lbas, nxs), None
 
-    st, _ = jax.lax.scan(step, st, traces.T)
+    st, _ = jax.lax.scan(step, st, (traces.T, nxts.T))
     return st
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def _run_fleet(cfg: JaxSimConfig, traces: jnp.ndarray, masked: bool,
-               policies: dict) -> dict:
-    return fleet_body(cfg, masked, traces, policies)
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def _run_fleet(cfg: JaxSimConfig, traces: jnp.ndarray, nxts: jnp.ndarray,
+               masked: bool, policies: dict) -> dict:
+    return fleet_body(cfg, masked, traces, nxts, policies)
 
 
 def summarize_fleet(cfg: JaxSimConfig, st: dict, n_volumes: int) -> dict:
@@ -600,6 +714,9 @@ def simulate_fleet(traces, cfg: JaxSimConfig, policies: dict | None = None) -> d
     if policies is None:
         policies = broadcast_policies(cfg, V)
     policies = {k: jnp.asarray(v) for k, v in policies.items()}
+    nxts = fleet_annotations(padded, policies["p_scheme"])
     st = jax.block_until_ready(
-        _run_fleet(cfg, jnp.asarray(padded), masked, policies))
+        _run_fleet(cfg, jnp.asarray(padded),
+                   coerce_fleet_annotations(nxts, padded.shape), masked,
+                   policies))
     return summarize_fleet(cfg, st, V)

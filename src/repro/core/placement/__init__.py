@@ -1,23 +1,25 @@
-"""Placement-scheme registry."""
+"""Placement schemes, resolved through the registry (`registry.py`).
 
+The registry is the single source of truth for both backends: numpy
+``Placement`` classes and the JAX triples live under one ``SchemeDef`` per
+scheme. ``make_placement`` accepts the historical string names (thin
+deprecation shim — it also takes a ``SchemeDef`` or ``Placement`` subclass),
+and the legacy ``SCHEMES`` name->class dict remains as an import-time
+snapshot of the registry.
+"""
+
+from . import registry
 from .base import Placement
-from .baselines import FK, NoSep, SepGC
-from .sepbit import SepBIT, SepBIT_GW, SepBIT_UW
-from .temperature import DAC, ETI, FADaC, MQ, SFR, SFS, WARCIP, MultiLog
+from .registry import (JaxPlacement, SchemeDef, all_schemes, make_placement,
+                       scheme_names)
 
-SCHEMES = {
-    cls.name: cls
-    for cls in (
-        NoSep, SepGC, FK, SepBIT, SepBIT_UW, SepBIT_GW,
-        DAC, SFS, MultiLog, ETI, MQ, SFR, FADaC, WARCIP,
-    )
-}
+# Deprecated alias: the historical name -> numpy-class mapping, a *snapshot*
+# of the registry taken at import time (a numpy_only scheme registered later
+# will be missing here). Kept for existing callers; use registry.get /
+# registry.numpy_schemes() for live lookups.
+SCHEMES = registry.numpy_schemes()
 
-
-def make_placement(name: str, n_lbas: int, segment_size: int, **kw) -> Placement:
-    if name not in SCHEMES:
-        raise ValueError(f"unknown placement scheme {name!r}; have {sorted(SCHEMES)}")
-    return SCHEMES[name](n_lbas, segment_size, **kw)
-
-
-__all__ = ["Placement", "SCHEMES", "make_placement"]
+__all__ = [
+    "Placement", "SchemeDef", "JaxPlacement", "SCHEMES", "registry",
+    "all_schemes", "scheme_names", "make_placement",
+]

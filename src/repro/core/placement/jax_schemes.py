@@ -1,0 +1,268 @@
+"""JAX implementations of the registered placement schemes.
+
+Each scheme is a :class:`~.registry.JaxPlacement` triple over a per-scheme
+slice of the jaxsim state pytree (keys prefixed ``sch_<name>_``), registered
+in dense-id order (``nosep``/``sepgc``/``sepbit`` keep their historical
+0/1/2 ids; the Pallas kernels take the id as a runtime scalar).
+
+Two families:
+
+* **Elementwise** schemes (nosep, sepgc, sepbit, uw, gw) are stateless given
+  the shared ℓ estimate: one ``fn(v, g, from_c1, is_gc, ell) -> cls``
+  serves user writes (``is_gc = 0``) and GC rewrites (``is_gc = 1``) alike.
+  The triple is derived from that function, and the same function is compiled
+  into the ``kernels/classify`` Pallas kernel (see
+  :func:`elementwise_chain`), so the kernel and jnp paths are bit-identical
+  by construction.
+
+* **Stateful** schemes carry per-LBA tables:
+
+  - ``dac``   — region ladder promoted on user writes / demoted on GC;
+  - ``ml``    — MultiLog: log2(update count) ladder, GC demotes one level;
+  - ``sfs``   — hotness (count/age) quantile groups, bounds re-sampled every
+    ``cfg.sfs_resample`` user writes (default matches the numpy
+    ``resample_every``; the numpy side's >65536-LBA reservoir subsample is
+    not replicated — the JAX quantile is exact over all seen LBAs);
+  - ``fk``    — the future-knowledge oracle: per-LBA pending BIT table fed
+    by the ``nxt`` trace annotation (`simulator.annotate_next_write`
+    clipped to ``NOBIT``), class = ceil(remaining lifespan / segment size).
+
+All classifiers mirror their numpy counterparts' decision boundaries; the
+float32-vs-float64 hotness arithmetic in ``sfs`` is the one knowingly
+inexact spot (class ties may resolve differently once the quantile bounds
+are live — WA-level agreement is what the differential gate checks against
+numpy; the three JAX engines remain bit-identical to each other).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .registry import JaxPlacement, register_jax
+
+NOBIT = 2 ** 30          # int32 "no next write" sentinel (== jaxsim.BIG)
+_SFS_RESAMPLE = 4096     # default SFS quantile refresh period; overridden by
+#                          JaxSimConfig.sfs_resample (numpy: resample_every)
+
+
+def _i32(x):
+    return x.astype(jnp.int32) if hasattr(x, "astype") else jnp.int32(x)
+
+
+# -- elementwise family --------------------------------------------------------
+
+def _ew_nosep(v, g, from_c1, is_gc, ell):
+    return jnp.zeros(jnp.shape(v), jnp.int32)
+
+
+def _ew_sepgc(v, g, from_c1, is_gc, ell):
+    return jnp.where(is_gc != 0, 1, 0).astype(jnp.int32)
+
+
+def _ew_sepbit(v, g, from_c1, is_gc, ell):
+    user_cls = jnp.where(v < ell, 0, 1)
+    age_cls = (3 + (g >= 4.0 * ell).astype(jnp.int32)
+               + (g >= 16.0 * ell).astype(jnp.int32))
+    gc_cls = jnp.where(from_c1 != 0, 2, age_cls)
+    return jnp.where(is_gc != 0, gc_cls, user_cls).astype(jnp.int32)
+
+
+def _ew_uw(v, g, from_c1, is_gc, ell):
+    """Exp#4 ablation UW: user classes 0/1 by lifespan, one GC class."""
+    user_cls = jnp.where(v < ell, 0, 1)
+    return jnp.where(is_gc != 0, 2, user_cls).astype(jnp.int32)
+
+
+def _ew_gw(v, g, from_c1, is_gc, ell):
+    """Exp#4 ablation GW: one user class, GC classes 1/2/3 by age."""
+    age_cls = (1 + (g >= 4.0 * ell).astype(jnp.int32)
+               + (g >= 16.0 * ell).astype(jnp.int32))
+    return jnp.where(is_gc != 0, age_cls, 0).astype(jnp.int32)
+
+
+def _from_elementwise(fn) -> JaxPlacement:
+    """Derive the full triple from a stateless elementwise classifier."""
+    zero = jnp.int32(0)
+
+    def init_state(cfg):
+        return {}
+
+    def user_class(cfg, st, lba, v, nxt):
+        cls = fn(v.astype(jnp.float32), jnp.float32(0), zero, zero, st["ell"])
+        return _i32(cls), st
+
+    def gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
+        from_c1 = jnp.full(g.shape, 0, jnp.int32) + (victim_cls == 0)
+        cls = fn(jnp.zeros(g.shape, jnp.float32), g.astype(jnp.float32),
+                 from_c1, jnp.ones(g.shape, jnp.int32), st["ell"])
+        return _i32(cls), st
+
+    return JaxPlacement(init_state, user_class, gc_classes, elementwise=fn)
+
+
+def elementwise_chain(scheme_id, v, g, from_c1, is_gc, ell):
+    """Classes for every *elementwise* registered scheme, selected by the
+    runtime ``scheme_id`` scalar — the body of the Pallas classify kernel
+    (and its jnp oracle). Ids without an elementwise form yield class 0;
+    their branches never consult this chain."""
+    from .registry import jax_schemes
+    out = jnp.zeros(jnp.shape(v), jnp.int32)
+    for sid, (sd, jp) in enumerate(jax_schemes()):
+        if jp.elementwise is not None:
+            out = jnp.where(scheme_id == sid,
+                            jp.elementwise(v, g, from_c1, is_gc, ell), out)
+    return out
+
+
+# -- dac: region ladder --------------------------------------------------------
+
+def _dac() -> JaxPlacement:
+    nc = 6
+
+    def init_state(cfg):
+        return {"sch_dac_region": jnp.zeros(cfg.n_lbas, jnp.int32)}
+
+    def user_class(cfg, st, lba, v, nxt):
+        r = jnp.minimum(st["sch_dac_region"][lba] + 1, nc - 1)
+        region = st["sch_dac_region"].at[lba].set(r)
+        return _i32(nc - 1 - r), dict(st, sch_dac_region=region)
+
+    def gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
+        region = st["sch_dac_region"]
+        r = jnp.maximum(region[lba_v] - 1, 0)
+        idx = jnp.where(valid_v, lba_v, cfg.n_lbas)    # dead slots: dropped
+        region = region.at[idx].set(r, mode="drop")
+        return _i32(nc - 1 - r), dict(st, sch_dac_region=region)
+
+    return JaxPlacement(init_state, user_class, gc_classes)
+
+
+# -- ml: MultiLog --------------------------------------------------------------
+
+def _ml() -> JaxPlacement:
+    nc = 6
+
+    def _bit_level(count):
+        # bit_length(count) - 1 == floor(log2) for count >= 1, exactly
+        return jnp.minimum(31 - jax.lax.clz(count), nc - 1)
+
+    def init_state(cfg):
+        return {"sch_ml_count": jnp.zeros(cfg.n_lbas, jnp.int32),
+                "sch_ml_level": jnp.zeros(cfg.n_lbas, jnp.int32)}
+
+    def user_class(cfg, st, lba, v, nxt):
+        count = st["sch_ml_count"].at[lba].add(1)
+        lvl = _bit_level(count[lba])
+        level = st["sch_ml_level"].at[lba].set(lvl)
+        return _i32(nc - 1 - lvl), dict(st, sch_ml_count=count,
+                                        sch_ml_level=level)
+
+    def gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
+        level = st["sch_ml_level"]
+        lvl = jnp.maximum(level[lba_v] - 1, 0)
+        idx = jnp.where(valid_v, lba_v, cfg.n_lbas)
+        level = level.at[idx].set(lvl, mode="drop")
+        return _i32(nc - 1 - lvl), dict(st, sch_ml_level=level)
+
+    return JaxPlacement(init_state, user_class, gc_classes)
+
+
+# -- sfs: hotness quantile groups ----------------------------------------------
+
+def _sfs() -> JaxPlacement:
+    nc = 6
+
+    def _hotness(count, first, t):
+        age = jnp.maximum(t - first, 1).astype(jnp.float32)
+        return count.astype(jnp.float32) / age
+
+    def _classify(st, h):
+        cls = nc - 1 - jnp.searchsorted(st["sch_sfs_bounds"], h)
+        return jnp.where(st["sch_sfs_ready"], cls, 0)
+
+    def init_state(cfg):
+        return {"sch_sfs_count": jnp.zeros(cfg.n_lbas, jnp.int32),
+                "sch_sfs_first": jnp.full(cfg.n_lbas, -1, jnp.int32),
+                "sch_sfs_since": jnp.int32(0),
+                "sch_sfs_bounds": jnp.zeros(nc - 1, jnp.float32),
+                "sch_sfs_ready": jnp.asarray(False)}
+
+    def user_class(cfg, st, lba, v, nxt):
+        first = st["sch_sfs_first"]
+        first = first.at[lba].set(jnp.where(first[lba] < 0, st["t"], first[lba]))
+        count = st["sch_sfs_count"].at[lba].add(1)
+        since = st["sch_sfs_since"] + 1
+        tick = since >= getattr(cfg, "sfs_resample", _SFS_RESAMPLE)
+        seen = first >= 0
+        k = jnp.sum(seen.astype(jnp.int32))
+
+        def refresh(_):
+            # masked quantile over the seen LBAs (numpy: np.quantile with
+            # linear interpolation at positions q * (k - 1))
+            h = jnp.where(seen, _hotness(count, first, st["t"]), jnp.inf)
+            hs = jnp.sort(h)
+            q = (jnp.arange(1, nc, dtype=jnp.float32) / nc
+                 * jnp.maximum(k - 1, 0).astype(jnp.float32))
+            lo = jnp.floor(q).astype(jnp.int32)
+            hi = jnp.ceil(q).astype(jnp.int32)
+            frac = q - lo.astype(jnp.float32)
+            return hs[lo] * (1.0 - frac) + hs[hi] * frac
+
+        do = tick & (k >= nc)
+        bounds = jax.lax.cond(do, refresh,
+                              lambda _: st["sch_sfs_bounds"], None)
+        cls = _classify(dict(st, sch_sfs_bounds=bounds,
+                             sch_sfs_ready=st["sch_sfs_ready"] | do),
+                        _hotness(count[lba], first[lba], st["t"]))
+        st = dict(st, sch_sfs_count=count, sch_sfs_first=first,
+                  sch_sfs_since=jnp.where(tick, 0, since).astype(jnp.int32),
+                  sch_sfs_bounds=bounds,
+                  sch_sfs_ready=st["sch_sfs_ready"] | do)
+        return _i32(cls), st
+
+    def gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
+        h = _hotness(st["sch_sfs_count"][lba_v], st["sch_sfs_first"][lba_v],
+                     st["t"])
+        return _i32(_classify(st, h)), st
+
+    return JaxPlacement(init_state, user_class, gc_classes)
+
+
+# -- fk: future-knowledge oracle -----------------------------------------------
+
+def _fk() -> JaxPlacement:
+    nc = 6
+
+    def _cls(cfg, remaining, never):
+        r = jnp.maximum(remaining, 1)
+        by_life = jnp.clip((r + cfg.segment_size - 1) // cfg.segment_size - 1,
+                           0, nc - 1)
+        return jnp.where(never, nc - 1, by_life)
+
+    def init_state(cfg):
+        return {"sch_fk_bit": jnp.full(cfg.n_lbas, NOBIT, jnp.int32)}
+
+    def user_class(cfg, st, lba, v, nxt):
+        bit = st["sch_fk_bit"].at[lba].set(nxt)
+        cls = _cls(cfg, nxt - st["t"], nxt >= NOBIT)
+        return _i32(cls), dict(st, sch_fk_bit=bit)
+
+    def gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
+        b = st["sch_fk_bit"][lba_v]
+        return _i32(_cls(cfg, b - st["t"], b >= NOBIT)), st
+
+    return JaxPlacement(init_state, user_class, gc_classes)
+
+
+# -- registration (order fixes the dense scheme-id table) ----------------------
+
+register_jax("nosep", _from_elementwise(_ew_nosep))
+register_jax("sepgc", _from_elementwise(_ew_sepgc))
+register_jax("sepbit", _from_elementwise(_ew_sepbit))
+register_jax("fk", _fk())
+register_jax("dac", _dac())
+register_jax("ml", _ml())
+register_jax("sfs", _sfs())
+register_jax("uw", _from_elementwise(_ew_uw))
+register_jax("gw", _from_elementwise(_ew_gw))

@@ -1,0 +1,245 @@
+"""Placement-scheme registry: the single source of truth for both backends.
+
+Every placement scheme is one :class:`SchemeDef` naming its class budget and
+its implementations:
+
+* the **numpy** side — a :class:`~.base.Placement` subclass driving the
+  reference event loop (`simulator.simulate`);
+* the **JAX** side — a :class:`JaxPlacement` triple of pure functions
+  (``init_state`` / ``user_class`` / ``gc_classes``) over a per-scheme state
+  slice carried in the jaxsim state pytree, dispatched via ``jax.lax.switch``
+  on the traced per-volume scheme id.
+
+Adding a scheme is a one-file act: subclass ``Placement``, call
+:func:`register`, and (optionally) attach a JAX triple with
+:func:`register_jax` — it then appears automatically in ``make_placement``,
+the jaxsim/fleet id tables, ``benchmarks/run.py --mode sweep`` grids, and the
+differential parity gate (tests/test_differential.py parametrizes over this
+registry). Schemes whose mechanism does not (yet) have a JAX port are
+registered with ``numpy_only=True``; :func:`validate` (run in CI) rejects a
+scheme that has neither a JAX triple nor that explicit marker.
+
+JAX scheme ids are assigned densely in JAX-registration order and are stable
+within a process; ``nosep``/``sepgc``/``sepbit`` keep their historical
+0/1/2 ids. The JAX triples live in `.jax_schemes`, imported lazily so the
+numpy-only path (``repro.core.simulator``) never pays the ``jax`` import.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from .base import Placement
+
+
+@dataclasses.dataclass(frozen=True)
+class JaxPlacement:
+    """Pure-function JAX implementation of one placement scheme.
+
+    All callables take the static :class:`~repro.core.jaxsim.JaxSimConfig`
+    first and thread the full state dict ``st`` (so a scheme reads shared
+    fields such as ``st["t"]`` / ``st["ell"]`` and returns updates to its own
+    ``sch_<name>_*`` slice only):
+
+    ``init_state(cfg) -> dict``
+        The scheme's state-pytree slice (keys prefixed ``sch_<name>_``).
+        Every registered JAX scheme's slice is carried by every volume so
+        heterogeneous fleets share one pytree structure; inactive schemes'
+        slices stay at their initial value (their branch never runs).
+
+    ``user_class(cfg, st, lba, v, nxt) -> (cls, st)``
+        Class for one user-written block. ``v`` = lifespan of the version it
+        invalidated; ``nxt`` = the block's annotated BIT (absolute index of
+        the next write to the same LBA, ``>= NOBIT`` if none) — consumed by
+        future-knowledge schemes, ignored by on-line ones.
+
+    ``gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g) -> (cls[], st)``
+        Classes for every slot of a GC victim segment (``valid_v`` masks the
+        live ones; state updates must not touch dead slots).
+
+    ``elementwise`` (optional)
+        ``fn(v, g, from_c1, is_gc, ell) -> cls`` — a stateless, purely
+        elementwise classifier equivalent to the pair above. Schemes that
+        declare it are routed through the Pallas ``kernels/classify`` kernel
+        under ``cfg.use_kernels`` (the kernel body is generated from these
+        functions); stateful schemes always classify via their jnp branch.
+    """
+
+    init_state: Callable
+    user_class: Callable
+    gc_classes: Callable
+    elementwise: Callable | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SchemeDef:
+    """One registered placement scheme (both backends)."""
+
+    name: str
+    n_classes: int
+    numpy_cls: type[Placement]
+    numpy_only: bool = False          # explicit "no JAX port" marker
+
+    @property
+    def requires_future(self) -> bool:
+        return bool(getattr(self.numpy_cls, "requires_future", False))
+
+
+_REGISTRY: dict[str, SchemeDef] = {}
+_JAX_IMPLS: dict[str, JaxPlacement] = {}
+_JAX_ORDER: list[str] = []            # dense id = position in this list
+_JAX_LOADED = False
+_CONSUMED = False                     # id table materialized (jaxsim import)
+
+
+def _check_open(name: str) -> None:
+    # jaxsim snapshots the dense id table at import; a scheme registered
+    # after that would be silently absent from the compiled lax.switch
+    # branch stacks (an out-of-range id *clamps* to the last branch rather
+    # than erroring). Fail loudly instead.
+    if _CONSUMED:
+        raise RuntimeError(
+            f"cannot register scheme {name!r}: the JAX engine already "
+            "materialized the scheme-id table. Register schemes in "
+            "placement/registry.py / placement/jax_schemes.py (or import "
+            "your registering module before repro.core.jaxsim).")
+
+
+def register(numpy_cls: type[Placement], *, numpy_only: bool = False) -> SchemeDef:
+    """Register a numpy Placement subclass under its ``name`` attribute.
+
+    ``numpy_only`` schemes never enter the JAX id table, so they may be
+    registered at any time; schemes expecting a JAX triple must land before
+    the JAX engine materializes the table (see :func:`_check_open`)."""
+    name = numpy_cls.name
+    if not numpy_only:
+        _check_open(name)
+    if name in _REGISTRY:
+        raise ValueError(f"placement scheme {name!r} registered twice")
+    sd = SchemeDef(name=name, n_classes=int(numpy_cls.n_classes),
+                   numpy_cls=numpy_cls, numpy_only=numpy_only)
+    _REGISTRY[name] = sd
+    return sd
+
+
+def register_jax(name: str, impl: JaxPlacement) -> None:
+    """Attach a JAX triple to a registered scheme; assigns the next dense id."""
+    _check_open(name)
+    if name not in _REGISTRY:
+        raise ValueError(f"register_jax({name!r}): scheme not registered")
+    if _REGISTRY[name].numpy_only:
+        raise ValueError(f"scheme {name!r} is marked numpy_only")
+    if name in _JAX_IMPLS:
+        raise ValueError(f"JAX impl for {name!r} registered twice")
+    _JAX_IMPLS[name] = impl
+    _JAX_ORDER.append(name)
+
+
+def _ensure_jax_loaded() -> None:
+    global _JAX_LOADED
+    if not _JAX_LOADED:
+        _JAX_LOADED = True
+        from . import jax_schemes  # noqa: F401  (registers on import)
+
+
+def get(name: str) -> SchemeDef:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown placement scheme {name!r}; "
+                         f"have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def resolve(spec) -> SchemeDef:
+    """Deprecation shim: accept a scheme name (the historical string API),
+    a SchemeDef, or a Placement subclass, and return the SchemeDef."""
+    if isinstance(spec, SchemeDef):
+        return spec
+    if isinstance(spec, type) and issubclass(spec, Placement):
+        return get(spec.name)
+    if isinstance(spec, str):
+        return get(spec)
+    raise TypeError(f"cannot resolve placement scheme from {spec!r}")
+
+
+def make_placement(spec, n_lbas: int, segment_size: int, **kw) -> Placement:
+    """Instantiate a scheme's numpy implementation (string names keep
+    working; SchemeDef / Placement subclasses are accepted too)."""
+    return resolve(spec).numpy_cls(n_lbas, segment_size, **kw)
+
+
+def all_schemes() -> tuple[SchemeDef, ...]:
+    return tuple(_REGISTRY.values())
+
+
+def scheme_names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def numpy_schemes() -> dict[str, type[Placement]]:
+    """name -> numpy class view (the legacy ``SCHEMES`` dict)."""
+    return {name: sd.numpy_cls for name, sd in _REGISTRY.items()}
+
+
+def jax_schemes() -> tuple[tuple[SchemeDef, JaxPlacement], ...]:
+    """JAX-capable schemes in dense-id order (id = position). Materializing
+    the table freezes the registry — later ``register*`` calls raise (see
+    :func:`_check_open`)."""
+    global _CONSUMED
+    _ensure_jax_loaded()
+    _CONSUMED = True
+    return tuple((_REGISTRY[n], _JAX_IMPLS[n]) for n in _JAX_ORDER)
+
+
+def jax_scheme_id(name: str) -> int:
+    _ensure_jax_loaded()
+    try:
+        return _JAX_ORDER.index(name)
+    except ValueError:
+        raise ValueError(
+            f"scheme {name!r} has no JAX implementation (numpy-only); "
+            f"JAX schemes: {tuple(_JAX_ORDER)}") from None
+
+
+def validate() -> None:
+    """Registry-completeness check (run in CI): every scheme declares a
+    positive class budget, a numpy implementation whose class attributes
+    agree with the registry entry, and either a JAX triple or an explicit
+    ``numpy_only`` marker. JAX ids must be dense with the historical 0/1/2
+    anchor (the Pallas kernels encode scheme ids as runtime scalars)."""
+    _ensure_jax_loaded()
+    if not _REGISTRY:
+        raise AssertionError("placement registry is empty")
+    for name, sd in _REGISTRY.items():
+        if not (isinstance(sd.n_classes, int) and sd.n_classes >= 1):
+            raise AssertionError(f"{name}: bad n_classes {sd.n_classes!r}")
+        if not (isinstance(sd.numpy_cls, type)
+                and issubclass(sd.numpy_cls, Placement)):
+            raise AssertionError(f"{name}: numpy impl is not a Placement")
+        if sd.numpy_cls.name != name or sd.numpy_cls.n_classes != sd.n_classes:
+            raise AssertionError(f"{name}: numpy class attributes drifted")
+        if sd.numpy_only == (name in _JAX_IMPLS):
+            raise AssertionError(
+                f"{name}: needs exactly one of a JAX triple or numpy_only")
+    for anchor, want in (("nosep", 0), ("sepgc", 1), ("sepbit", 2)):
+        if _JAX_ORDER[want] != anchor:
+            raise AssertionError(f"JAX id {want} must stay {anchor!r} "
+                                 f"(kernel scheme-id compatibility)")
+
+
+# -- the scheme zoo ------------------------------------------------------------
+# Paper §4.1: structural baselines, SepBIT + its Exp#4 ablations, the FK
+# future-knowledge oracle, and the eight temperature schemes. Registration
+# order of the JAX triples (in .jax_schemes) fixes the dense id table.
+
+from .baselines import FK, NoSep, SepGC                           # noqa: E402
+from .sepbit import SepBIT, SepBIT_GW, SepBIT_UW                  # noqa: E402
+from .temperature import (DAC, ETI, FADaC, MQ, SFR, SFS,          # noqa: E402
+                          WARCIP, MultiLog)
+
+for _cls in (NoSep, SepGC, SepBIT, FK, DAC, MultiLog, SFS, SepBIT_UW,
+             SepBIT_GW):
+    register(_cls)
+for _cls in (ETI, MQ, SFR, FADaC, WARCIP):
+    register(_cls, numpy_only=True)   # stateful float-decay/clustering ladders
+del _cls

@@ -113,12 +113,13 @@ def run_gc_once(vol: Volume, placement: Placement, gc: GCPolicy,
     return rewritten
 
 
-def simulate(trace: np.ndarray, scheme: str, *, n_lbas: int | None = None,
+def simulate(trace: np.ndarray, scheme, *, n_lbas: int | None = None,
              segment_size: int = 256, gp_threshold: float = 0.15,
              selector: str = "cost_benefit", gc_batch_segments: int = 1,
              placement_kwargs: dict | None = None,
              max_gc_per_write: int = 64) -> SimResult:
-    """Replay ``trace`` under ``scheme``; return WA and statistics."""
+    """Replay ``trace`` under ``scheme`` (a registry name, SchemeDef, or
+    Placement subclass); return WA and statistics."""
     t0 = time.perf_counter()
     trace = np.asarray(trace, dtype=np.int64)
     if n_lbas is None:
@@ -153,7 +154,10 @@ def simulate(trace: np.ndarray, scheme: str, *, n_lbas: int | None = None,
     fifo_samples = getattr(placement, "fifo_occupancy_samples", None)
     wss = int(np.count_nonzero(vol.last_user_write > -INF))
     return SimResult(
-        scheme=scheme,
+        # the registry entry's canonical name, not the caller's spelling —
+        # jaxsim._summary resolves through the same registry, so the two
+        # result paths cannot drift
+        scheme=placement.name,
         selector=selector,
         n_lbas=n_lbas,
         segment_size=segment_size,

@@ -1,20 +1,21 @@
-"""Pallas TPU kernel: SepBIT class assignment (Algorithm 1, vectorized).
+"""Pallas TPU kernel: placement-class assignment, generated from the registry.
 
-Fuses the paper's UserWrite / GCWrite placement decisions over a *batch* of
-written blocks — the form the decision takes in the serving integration,
-where a KV-compaction tick classifies thousands of pages at once:
+Fuses the per-block placement decision over a *batch* of written blocks —
+the form the decision takes in the GC hot path and the serving integration,
+where a compaction tick classifies thousands of pages at once.
 
-  user write:            class = 0 if v < ell else 1
-  GC write, from C1:     class = 2
-  GC write, otherwise:   class = 3 + (g >= 4*ell) + (g >= 16*ell)
+The kernel body is built from the placement registry
+(`core/placement/registry.py`): every registered JAX scheme that declares an
+``elementwise`` classifier ``fn(v, g, from_c1, is_gc, ell) -> cls`` (nosep,
+sepgc, sepbit and the Exp#4 ablations uw/gw) is compiled into one select
+chain keyed on the *runtime* scheme-id scalar — heterogeneous fleets vmap
+this kernel with a different scheme per volume, so the choice cannot be
+baked into the compiled kernel. Registering a new elementwise scheme lands
+it here automatically; stateful schemes (dac/ml/sfs/fk) classify via their
+jnp branch in `jaxsim._gc_class_dispatch` and never consult this kernel.
 
 Inputs: v (predecessor lifespan), g (age), from_c1 / is_gc flags, and the
 scalar ell; elementwise over (8,128)-tiled int32 blocks on the VPU.
-
-The scheme is a *runtime* scalar (0 = nosep, 1 = sepgc, 2 = sepbit, matching
-jaxsim.SCHEME_IDS): heterogeneous fleets vmap this kernel with a different
-scheme per volume. NoSep collapses every class to 0, SepGC to {0 user,
-1 GC}, SepBIT runs Algorithm 1 above.
 """
 
 from __future__ import annotations
@@ -25,29 +26,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.placement.jax_schemes import elementwise_chain
+from repro.core.placement.registry import jax_scheme_id
+
 LANE = 128
 TILE_ROWS = 8
 
 
-NOSEP, SEPGC, SEPBIT = 0, 1, 2   # scheme ids (must match jaxsim.SCHEME_IDS)
-
-
 def _classify_kernel(ell_ref, scheme_ref, v_ref, g_ref, from_c1_ref, is_gc_ref,
                      out_ref):
-    ell = ell_ref[0, 0]
-    scheme = scheme_ref[0, 0]
-    v = v_ref[...].astype(jnp.float32)
-    g = g_ref[...].astype(jnp.float32)
-    from_c1 = from_c1_ref[...] != 0
-    is_gc = is_gc_ref[...] != 0
-
-    user_cls = jnp.where(v < ell, 0, 1)
-    age_cls = 3 + (g >= 4.0 * ell).astype(jnp.int32) + (g >= 16.0 * ell).astype(jnp.int32)
-    gc_cls = jnp.where(from_c1, 2, age_cls)
-    sepbit = jnp.where(is_gc, gc_cls, user_cls).astype(jnp.int32)
-    sepgc = jnp.where(is_gc, 1, 0).astype(jnp.int32)
-    out_ref[...] = jnp.where(scheme == SEPBIT, sepbit,
-                             jnp.where(scheme == SEPGC, sepgc, 0))
+    out_ref[...] = elementwise_chain(
+        scheme_ref[0, 0],
+        v_ref[...].astype(jnp.float32), g_ref[...].astype(jnp.float32),
+        from_c1_ref[...], is_gc_ref[...], ell_ref[0, 0])
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -56,13 +47,14 @@ def classify(v: jax.Array, g: jax.Array, from_c1: jax.Array, is_gc: jax.Array,
              interpret: bool = True) -> jax.Array:
     """Placement class ids for a batch of writes. 1-D equal-length inputs.
     ``scheme_id`` (traced int32 scalar) selects the scheme per call/volume;
-    omitted = SepBIT (the historical behavior)."""
+    omitted = SepBIT (the historical behavior). Only elementwise-registered
+    scheme ids produce meaningful classes; others yield class 0."""
     (B,) = v.shape
     tile = TILE_ROWS * LANE
     Bp = ((B + tile - 1) // tile) * tile
     pad = Bp - B
     if scheme_id is None:
-        scheme_id = jnp.int32(SEPBIT)
+        scheme_id = jnp.int32(jax_scheme_id("sepbit"))
 
     def prep(x):
         return jnp.pad(x.astype(jnp.int32), (0, pad)).reshape(Bp // LANE, LANE)

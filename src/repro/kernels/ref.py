@@ -25,17 +25,29 @@ def segment_select_ref(seg_n, seg_nvalid, seg_stime, seg_state, t, *,
 
 
 def classify_ref(v, g, from_c1, is_gc, ell, *, scheme_id=None):
+    """Elementwise classify oracle, written out *independently* of the
+    registry's elementwise functions (which the Pallas kernel body is
+    generated from) so kernel tests compare against a second derivation of
+    §4.1's class maps, not the kernel's own source. scheme_id None = SepBIT;
+    ids follow the registry's dense order (nosep 0, sepgc 1, sepbit 2,
+    uw 7, gw 8 — the stateful ids 3-6 never reach the kernel)."""
     v = v.astype(jnp.float32)
     g = g.astype(jnp.float32)
     user_cls = jnp.where(v < ell, 0, 1)
-    age_cls = 3 + (g >= 4.0 * ell).astype(jnp.int32) + (g >= 16.0 * ell).astype(jnp.int32)
+    age_cls = (3 + (g >= 4.0 * ell).astype(jnp.int32)
+               + (g >= 16.0 * ell).astype(jnp.int32))
     gc_cls = jnp.where(from_c1 != 0, 2, age_cls)
     sepbit = jnp.where(is_gc != 0, gc_cls, user_cls).astype(jnp.int32)
     if scheme_id is None:
         return sepbit
     sepgc = jnp.where(is_gc != 0, 1, 0).astype(jnp.int32)
+    uw = jnp.where(is_gc != 0, 2, user_cls).astype(jnp.int32)
+    gw = jnp.where(is_gc != 0, age_cls - 2, 0).astype(jnp.int32)
     sid = jnp.asarray(scheme_id)
-    return jnp.where(sid == 2, sepbit, jnp.where(sid == 1, sepgc, 0))
+    out = jnp.zeros(jnp.shape(v), jnp.int32)
+    for want, cls in ((1, sepgc), (2, sepbit), (7, uw), (8, gw)):
+        out = jnp.where(sid == want, cls, out)
+    return out
 
 
 def zipf_bit_sums_ref(probs, u0, v0, g0, r0):

@@ -111,10 +111,18 @@ def test_classify_sweep(B):
         np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
 
 
-@pytest.mark.parametrize("scheme_id", [0, 1, 2])
+def _elementwise_ids():
+    """Every registry scheme with an elementwise (kernel-backed) classifier."""
+    from repro.core.placement import registry
+    return [i for i, (_, jp) in enumerate(registry.jax_schemes())
+            if jp.elementwise is not None]
+
+
+@pytest.mark.parametrize("scheme_id", _elementwise_ids())
 def test_classify_traced_scheme_id(scheme_id):
-    """Per-volume scheme: 0 collapses to class 0, 1 to {0 user, 1 GC}, 2 to
-    the SepBIT Algorithm-1 classes — against the jnp oracle."""
+    """Per-volume scheme: every elementwise-registered id (0 collapses to
+    class 0, 1 to {0 user, 1 GC}, 2 to the SepBIT Algorithm-1 classes, plus
+    the uw/gw ablations) — kernel against the jnp oracle."""
     B = 700
     v = RNG.integers(0, 10_000, B)
     g = RNG.integers(0, 100_000, B)

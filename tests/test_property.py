@@ -80,9 +80,16 @@ def test_elastic_plan_feasible(n_hosts_chips, mp):
 
 # -- heterogeneous fleet invariants -------------------------------------------
 # Fixed shapes (V, T, n_lbas) so every hypothesis example reuses one compiled
-# program: only the LBA values and the per-volume policy arrays vary.
+# program: only the LBA values and the per-volume policy arrays vary. The
+# scheme axis is the registry's full JAX zoo — a newly registered scheme is
+# automatically drawn into these properties.
 
 _FV, _FT, _FN = 3, 48, 16
+
+
+def _jax_scheme_names():
+    from repro.core.jaxsim import SCHEME_NAMES
+    return list(SCHEME_NAMES)
 
 
 def _fleet_cfg():
@@ -92,7 +99,7 @@ def _fleet_cfg():
 
 @settings(max_examples=10, deadline=None)
 @given(st.lists(st.integers(0, _FN - 1), min_size=_FV * _FT, max_size=_FV * _FT),
-       st.lists(st.sampled_from(["nosep", "sepgc", "sepbit"]),
+       st.lists(st.sampled_from(_jax_scheme_names()),
                 min_size=_FV, max_size=_FV),
        st.lists(st.sampled_from(["greedy", "cost_benefit"]),
                 min_size=_FV, max_size=_FV),
@@ -132,7 +139,7 @@ def test_hetero_fleet_matches_single_volume(data):
     from repro.core.jaxsim import simulate_jax
     lbas = data.draw(st.lists(st.integers(0, _FN - 1),
                               min_size=_FV * _FT, max_size=_FV * _FT))
-    schemes = data.draw(st.lists(st.sampled_from(["nosep", "sepgc", "sepbit"]),
+    schemes = data.draw(st.lists(st.sampled_from(_jax_scheme_names()),
                                  min_size=_FV, max_size=_FV))
     selectors = data.draw(st.lists(st.sampled_from(["greedy", "cost_benefit"]),
                                    min_size=_FV, max_size=_FV))
@@ -149,6 +156,34 @@ def test_hetero_fleet_matches_single_volume(data):
         assert res["volumes"][i]["wa"] == single["wa"]
         assert res["volumes"][i]["gc_writes"] == single["gc_writes"]
         assert res["volumes"][i]["class_user_writes"] == single["class_user_writes"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_scheme_class_ids_within_declared_budget(data):
+    """For any traces and any registry scheme mix: with the class axis
+    padded to the fleet-wide maximum, each volume's emitted class ids stay
+    within its scheme's declared ``n_classes`` — user/GC class counters and
+    open-segment metadata beyond the budget are exactly zero."""
+    from repro.core.fleetshard import encode_policies, simulate_fleet_hetero
+    from repro.core.jaxsim import SCHEME_CLASSES, SCHEME_IDS
+    lbas = data.draw(st.lists(st.integers(0, _FN - 1),
+                              min_size=_FV * _FT, max_size=_FV * _FT))
+    schemes = data.draw(st.lists(st.sampled_from(_jax_scheme_names()),
+                                 min_size=_FV, max_size=_FV))
+    traces = np.asarray(lbas, np.int32).reshape(_FV, _FT)
+    policy = encode_policies(_FV, schemes=schemes, selectors="cost_benefit",
+                             gp_thresholds=0.15)
+    res, state = simulate_fleet_hetero(traces, _fleet_cfg(), policy,
+                                       return_state=True)
+    for i, name in enumerate(schemes):
+        c = SCHEME_CLASSES[SCHEME_IDS[name]]
+        vol = res["volumes"][i]
+        assert sum(vol["class_user_writes"][c:]) == 0, name
+        assert sum(vol["class_gc_writes"][c:]) == 0, name
+        seg_cls = np.asarray(state["seg_cls"][i])
+        live = np.asarray(state["seg_state"][i]) == 1
+        assert (seg_cls[live] < c).all(), name
 
 
 @given(st.lists(st.integers(1, 200), min_size=4, max_size=60))
