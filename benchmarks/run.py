@@ -349,6 +349,91 @@ def sweep(full=False, n_volumes=None, kind="mixed", schemes=None,
         _row(f"sweep/{kind}/json", 0, json_path)
 
 
+def gcbench(full=False, n_volumes=None, kind="mixed", gp_grid=None,
+            json_path=None):
+    """Steady-state fleet GC throughput: the synchronized-tick engine
+    (fleet-level GC ticks, fused ``_gc_once``, scheme-grouped dispatch)
+    against the pre-tick ``legacy`` engine on a heterogeneous-GP fleet.
+
+    Heterogeneous GP thresholds de-synchronize GC triggers across volumes —
+    the worst case for the legacy vmapped ``while_loop``, which paid a
+    per-volume victim argmax on *every* user write and ran the full rewrite
+    cascade for every volume whenever any one triggered. Reports cold
+    (compile-inclusive) and steady (recompile-free repeat) timings for both
+    engines, asserts bitwise result parity between them, and writes the
+    ``BENCH_fleet_gc.json`` artifact (schema-checked + uploaded in CI)."""
+    import dataclasses
+
+    import jax
+
+    from repro.core.fleetshard import encode_policies, simulate_fleet_hetero
+    from repro.core.jaxsim import JaxSimConfig
+    from repro.core.tracegen import make_fleet
+
+    V = n_volumes or 16
+    n = 512 if full else 256
+    gps = gp_grid or [0.08, 0.12, 0.16, 0.22]
+    gp_per_vol = [gps[i % len(gps)] for i in range(V)]
+    traces = make_fleet(kind, V, n, 4 * n, jitter=0.25, seed=23)
+    policy = encode_policies(V, schemes="sepbit", selectors="cost_benefit",
+                             gp_thresholds=gp_per_vol)
+    base = JaxSimConfig(n_lbas=n, segment_size=32)
+
+    engines, results = {}, {}
+    for name, cfg, group in (
+            ("legacy", dataclasses.replace(base, gc_engine="legacy"), False),
+            ("tick", base, True)):
+        jax.clear_caches()
+        us_cold, res = _timed(lambda: simulate_fleet_hetero(
+            traces, cfg, policy, group=group))
+        us_steady, res = _timed(lambda: simulate_fleet_hetero(
+            traces, cfg, policy, group=group))
+        results[name] = res
+        engines[name] = {
+            "cold_us": us_cold, "steady_us": us_steady,
+            "steady_volumes_per_s": 1e6 * V / us_steady, "grouped": group,
+        }
+        _row(f"gcbench/{kind}/{name}_steady_v{V}", us_steady,
+             f"volumes_per_s={1e6 * V / us_steady:.2f};"
+             f"WA={res['fleet']['wa']:.4f}")
+    speedup = (engines["tick"]["steady_volumes_per_s"]
+               / engines["legacy"]["steady_volumes_per_s"])
+    parity = all(
+        a["wa"] == b["wa"] and a["gc_writes"] == b["gc_writes"]
+        and a["reclaimed"] == b["reclaimed"] and a["ell"] == b["ell"]
+        for a, b in zip(results["tick"]["volumes"],
+                        results["legacy"]["volumes"]))
+    _row(f"gcbench/{kind}/steady_speedup", 0, f"x={speedup:.2f}")
+    _row(f"gcbench/{kind}/parity", 0, "ok" if parity else "MISMATCH")
+
+    vols = results["tick"]["volumes"]
+    reclaimed = [v["reclaimed"] for v in vols]
+    total_user = sum(v["user_writes"] for v in vols)
+    artifact = {
+        "bench": "fleet_gc",
+        "n_volumes": V, "n_lbas": n, "segment_size": 32, "workload": kind,
+        "scheme": "sepbit", "selector": "cost_benefit",
+        "gp_thresholds": gp_per_vol,
+        "n_devices": results["tick"]["fleet"]["n_devices"],
+        "engines": engines,
+        "speedup_steady": speedup,
+        "parity_ok": parity,
+        "gc": {
+            "total_reclaimed": sum(reclaimed),
+            "per_volume_reclaimed": reclaimed,
+            "gc_per_1k_user_writes": 1000.0 * sum(reclaimed)
+            / max(total_user, 1),
+        },
+        "per_volume": [
+            {"gp": gp_per_vol[i], "wa": v["wa"], "gc_writes": v["gc_writes"],
+             "reclaimed": v["reclaimed"]} for i, v in enumerate(vols)],
+    }
+    out = json_path or "BENCH_fleet_gc.json"
+    with open(out, "w") as fp:
+        json.dump(artifact, fp, indent=1)
+    _row(f"gcbench/{kind}/json", 0, out)
+
+
 def kernels(full=False):
     """Pallas kernel interpret-mode validation timings."""
     import jax.numpy as jnp
@@ -392,7 +477,7 @@ BENCHES = {
     "fig8": fig8_user_bit, "fig10": fig10_gc_bit, "fig9_11": fig9_11_trace,
     "obs": obs_trace_analysis, "kv_wa": kv_wa, "ckpt_wa": ckpt_wa,
     "jaxsim": jaxsim_throughput, "fleet": fleet, "sweep": sweep,
-    "kernels": kernels, "roofline": roofline,
+    "gcbench": gcbench, "kernels": kernels, "roofline": roofline,
 }
 
 
@@ -401,10 +486,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="benchmark-grade sizes")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     ap.add_argument("--mode", default=None,
-                    choices=[None, "paper", "fleet", "sweep"],
+                    choices=[None, "paper", "fleet", "sweep", "gcbench"],
                     help="fleet = batched multi-volume replay benchmark only; "
                          "sweep = heterogeneous policy-grid sweep only; "
-                         "paper = every bench except fleet/sweep")
+                         "gcbench = steady-state GC-tick engine vs the legacy "
+                         "fleet path (writes BENCH_fleet_gc.json); "
+                         "paper = every bench except fleet/sweep/gcbench")
     ap.add_argument("--volumes", type=int, default=None,
                     help="fleet/sweep mode: number of volumes")
     ap.add_argument("--workload", default="mixed",
@@ -426,18 +513,21 @@ def main() -> None:
     benches = dict(BENCHES)  # bind fleet flags once, wherever it's dispatched
     benches["fleet"] = functools.partial(fleet, n_volumes=args.volumes,
                                          kind=args.workload)
+    gp_grid = [float(x) for x in args.gp_grid.split(",")] if args.gp_grid else None
     benches["sweep"] = functools.partial(
         sweep, n_volumes=args.volumes, kind=args.workload,
         schemes=args.schemes.split(",") if args.schemes else None,
         selectors=args.selectors.split(",") if args.selectors else None,
-        gp_grid=[float(x) for x in args.gp_grid.split(",")] if args.gp_grid else None,
-        use_kernels=args.use_kernels, json_path=args.json)
-    if args.mode in ("fleet", "sweep"):
+        gp_grid=gp_grid, use_kernels=args.use_kernels, json_path=args.json)
+    benches["gcbench"] = functools.partial(
+        gcbench, n_volumes=args.volumes, kind=args.workload,
+        gp_grid=gp_grid, json_path=args.json)
+    if args.mode in ("fleet", "sweep", "gcbench"):
         benches[args.mode](full=args.full)
         return
     names = args.only.split(",") if args.only else list(benches)
     if args.mode == "paper" and not args.only:
-        names = [n for n in names if n not in ("fleet", "sweep")]
+        names = [n for n in names if n not in ("fleet", "sweep", "gcbench")]
     for name in names:
         benches[name](full=args.full)
 

@@ -42,7 +42,8 @@ def run_sweep(args) -> None:
 
     t0 = time.perf_counter()
     res = simulate_fleet_sweep(traces, cfg, schemes=schemes,
-                               selectors=selectors, gp_thresholds=gp_grid)
+                               selectors=selectors, gp_thresholds=gp_grid,
+                               group=not args.ungrouped)
     dt = time.perf_counter() - t0
 
     print(f"\n{'scheme':>8s} {'selector':>14s} {'gp':>5s} {'vols':>5s} "
@@ -56,7 +57,8 @@ def run_sweep(args) -> None:
     print(f"\nbest cell: {best['scheme']}/{best['selector']}"
           f"/gp={best['gp_threshold']:.2f} (WA={best['wa']:.4f})")
     print(f"{f['n_volumes'] / dt:.2f} volumes/s (incl. compile) on "
-          f"{f['n_devices']} device(s), free_exhausted={f['free_exhausted']}")
+          f"{f['n_devices']} device(s), {f['n_scheme_groups']} scheme "
+          f"group(s), free_exhausted={f['free_exhausted']}")
 
 
 def main():
@@ -86,6 +88,9 @@ def main():
                     help="sweep: comma-separated selectors")
     ap.add_argument("--gp-grid", default="0.10,0.15,0.20",
                     help="sweep: comma-separated GP thresholds")
+    ap.add_argument("--ungrouped", action="store_true",
+                    help="sweep: one program for the whole fleet instead of "
+                         "per-scheme groups with pruned dispatch")
     args = ap.parse_args()
 
     if args.sweep:

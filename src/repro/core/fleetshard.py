@@ -20,6 +20,13 @@ of `jaxsim.fleet_body`:
    collectives, embarrassingly parallel), with a plain `jax.jit` fallback on
    a single device. The fleet is padded to a multiple of the device count by
    replicating the last volume; pad rows are dropped before summarizing.
+4. **Scheme-grouped dispatch** — a vmapped `lax.switch` evaluates every
+   registered scheme's branch per step and selects per volume, so a mixed
+   fleet pays the whole zoo. `simulate_fleet_hetero(group=True)` (default)
+   sorts volumes into per-scheme groups, replays each group under a config
+   whose branch stack is pruned to that scheme (`JaxSimConfig.scheme_group`),
+   and reassembles results in input order — bit-identical to the ungrouped
+   replay because every group shares the full fleet's static shapes.
 """
 
 from __future__ import annotations
@@ -182,30 +189,26 @@ def _sharded_runner(cfg: JaxSimConfig, masked: bool, mesh: Mesh):
                              out_specs=P("fleet"), check_rep=False))
 
 
-def simulate_fleet_hetero(traces, cfg: JaxSimConfig, policy: FleetPolicy, *,
-                          mesh: Mesh | None = None, shard: bool = True,
-                          return_state: bool = False):
-    """Replay a heterogeneous-config fleet in one compiled program, sharded
-    across devices when more than one is visible.
+def scheme_groups(policy: FleetPolicy) -> list[tuple[str, np.ndarray]]:
+    """Distinct schemes present in a fleet and their volume indices, in
+    dense-id order. The grouped runner replays each group under a config
+    whose dispatch branch stack is pruned to that one scheme
+    (``JaxSimConfig.scheme_group``), instead of paying every registered
+    scheme's `lax.switch` branch per step per volume."""
+    return [(SCHEME_NAMES[int(sid)],
+             np.nonzero(policy.scheme_id == sid)[0])
+            for sid in np.unique(policy.scheme_id)]
 
-    ``traces``: list of 1-D LBA traces or padded (V, T) matrix; ``policy``:
-    per-volume knobs (see :func:`encode_policies` / :func:`policy_grid`).
-    ``cfg`` supplies the static shape knobs (n_lbas, segment size, kernels);
-    its scheme/selector/gp are ignored in favor of ``policy``. Returns the
-    same result dict as `simulate_fleet` (plus the final batched state when
-    ``return_state``)."""
-    padded = coerce_fleet(traces)
+
+def _replay_fleet(padded: np.ndarray, cfg_h: JaxSimConfig,
+                  policy: FleetPolicy, mesh: Mesh | None) -> dict:
+    """One fleet replay (no grouping): shard_map over the mesh when more
+    than one device is visible, plain jit otherwise. Returns the final
+    batched state (device)."""
     V = padded.shape[0]
-    if policy.n_volumes != V:
-        raise ValueError(f"policy covers {policy.n_volumes} volumes, "
-                         f"traces cover {V}")
-    cfg_h = hetero_config(cfg, policy)
     masked = bool((padded < 0).any())
     pol_arrays = policy.as_state_arrays()
     nxts = fleet_annotations(padded, policy.scheme_id)
-
-    if mesh is None and shard:
-        mesh = fleet_mesh()
     if mesh is not None and mesh.size > 1:
         d = mesh.size
         pad_rows = (-V) % d
@@ -226,8 +229,63 @@ def simulate_fleet_hetero(traces, cfg: JaxSimConfig, policy: FleetPolicy, *,
             _run_fleet(cfg_h, jnp.asarray(padded),
                        coerce_fleet_annotations(nxts, padded.shape), masked,
                        pol_arrays))
+    return st
+
+
+def _policy_rows(policy: FleetPolicy, idx: np.ndarray) -> FleetPolicy:
+    return FleetPolicy(scheme_id=policy.scheme_id[idx],
+                       selector_id=policy.selector_id[idx],
+                       gp_threshold=policy.gp_threshold[idx],
+                       nc_window=policy.nc_window[idx])
+
+
+def simulate_fleet_hetero(traces, cfg: JaxSimConfig, policy: FleetPolicy, *,
+                          mesh: Mesh | None = None, shard: bool = True,
+                          group: bool = True, return_state: bool = False):
+    """Replay a heterogeneous-config fleet, sharded across devices when more
+    than one is visible and (by default) grouped by placement scheme.
+
+    ``traces``: list of 1-D LBA traces or padded (V, T) matrix; ``policy``:
+    per-volume knobs (see :func:`encode_policies` / :func:`policy_grid`).
+    ``cfg`` supplies the static shape knobs (n_lbas, segment size, kernels);
+    its scheme/selector/gp are ignored in favor of ``policy``.
+
+    ``group=True`` sorts volumes into per-scheme groups and replays each
+    group as its own program with the dispatch branch stack pruned to that
+    scheme (under vmap, `lax.switch` evaluates *every* branch per step —
+    grouping makes each volume pay only its own scheme's work). Every group
+    shares the full fleet's static shapes (`hetero_config` over the whole
+    policy), so per-volume results are bit-identical to the ungrouped
+    replay (and to single-volume runs) — `tests/test_differential.py` pins
+    all three. Returns the same result dict as `simulate_fleet` (plus the
+    final batched state, volumes in input order, when ``return_state``)."""
+    padded = coerce_fleet(traces)
+    V = padded.shape[0]
+    if policy.n_volumes != V:
+        raise ValueError(f"policy covers {policy.n_volumes} volumes, "
+                         f"traces cover {V}")
+    cfg_h = hetero_config(cfg, policy)
+    if mesh is None and shard:
+        mesh = fleet_mesh()
+
+    groups = scheme_groups(policy) if group else [(None, np.arange(V))]
+    states = []
+    for name, idx in groups:
+        cfg_g = cfg_h if name is None else dataclasses.replace(
+            cfg_h, scheme_group=(name,))
+        states.append(_replay_fleet(padded[idx], cfg_g,
+                                    _policy_rows(policy, idx), mesh))
+    if len(states) == 1:
+        st = states[0]
+    else:  # reassemble volumes in input order (groups share one pytree
+        #    structure: init_state carries every scheme's slice regardless)
+        order = np.argsort(np.concatenate([idx for _, idx in groups]))
+        st = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0)[order], *states)
+
     res = summarize_fleet(cfg_h, st, V)
     res["fleet"]["n_devices"] = 1 if mesh is None else mesh.size
+    res["fleet"]["n_scheme_groups"] = len(groups)
     if return_state:
         return res, jax.device_get(st)
     return res
@@ -296,7 +354,8 @@ def sweep_summary(res: dict, policy: FleetPolicy,
 
 def simulate_fleet_sweep(traces, cfg: JaxSimConfig, *, schemes, selectors,
                          gp_thresholds, nc_window: int = 16,
-                         mesh: Mesh | None = None, shard: bool = True) -> dict:
+                         mesh: Mesh | None = None, shard: bool = True,
+                         group: bool = True) -> dict:
     """One-call sweep: ``traces`` must hold ``cells × per_cell`` volumes laid
     out cell-major (see `tracegen.tiled_fleet`). Returns the fleet result
     with a ``"sweep"`` list of per-cell aggregates attached."""
@@ -308,7 +367,8 @@ def simulate_fleet_sweep(traces, cfg: JaxSimConfig, *, schemes, selectors,
     per_cell = padded.shape[0] // len(cells)
     policy, cells = policy_grid(schemes, selectors, gp_thresholds,
                                 volumes_per_cell=per_cell, nc_window=nc_window)
-    res = simulate_fleet_hetero(padded, cfg, policy, mesh=mesh, shard=shard)
+    res = simulate_fleet_hetero(padded, cfg, policy, mesh=mesh, shard=shard,
+                                group=group)
     res["sweep"] = sweep_summary(res, policy, cells)
     res["policy"] = policy
     return res

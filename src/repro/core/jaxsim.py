@@ -44,6 +44,19 @@ scheme present) with inactive classes masked to exact no-ops, so a volume's
 replay stays bit-identical to a single-volume run of its own scheme-derived
 config. `core/fleetshard.py` builds the per-volume policy arrays and shards
 the fleet axis across devices.
+
+GC engine (``cfg.gc_engine``): the default **tick** engine runs GC as
+synchronized fleet-level ticks — after each vmapped user write, a single
+``lax.while_loop`` ticks until no volume's garbage proportion exceeds its
+``p_gp`` threshold; triggering volumes run the fused `_gc_once` (one
+segmented scatter over (class, rank) keys) while the rest take masked exact
+no-ops, and the cheap GP guard runs *before* any victim-selection argmax.
+``cfg.scheme_group`` additionally prunes the dispatch branch stack to a
+static scheme subset (fleetshard groups volumes by scheme so each group
+compiles only its own branches). The **legacy** engine keeps the pre-tick
+formulation (entry-point victim selection, per-class unrolled rewrite) as
+the benchmark baseline and a bitwise parity oracle; docs/architecture.md
+maps the whole stack.
 """
 
 from __future__ import annotations
@@ -88,6 +101,15 @@ class JaxSimConfig:
     class_slots: int | None = None          # pad the class axis (hetero fleets)
     sfs_resample: int = 4096                # SFS quantile refresh period
     #                                         (= numpy SFS resample_every)
+    gc_engine: str = "tick"                 # "tick" (synchronized GC ticks,
+    #                                         fused _gc_once) or "legacy" (the
+    #                                         pre-tick per-volume loop, kept as
+    #                                         the gcbench baseline + a bitwise
+    #                                         parity oracle for the rewrite)
+    scheme_group: tuple[str, ...] | None = None
+    #                                       # prune the lax.switch branch stack
+    #                                         to these schemes only (grouped
+    #                                         dispatch; None = full registry)
 
     @property
     def n_classes(self) -> int:
@@ -126,8 +148,40 @@ def _scheme_id_or_raise(scheme: str) -> int:
     return SCHEME_IDS[scheme]
 
 
+def _dispatch_table(cfg: JaxSimConfig):
+    """The (SchemeDef, JaxPlacement) branch stack this config dispatches
+    over, plus each branch's *global* dense scheme id.
+
+    ``cfg.scheme_group`` prunes the stack: a fleet whose volumes all run
+    schemes from the group compiles only those branches instead of paying
+    every registered scheme's branch per step (under vmap, ``lax.switch``
+    lowers to a select over *all* branch results). `core/fleetshard.py`
+    groups volumes by scheme id and runs each group under a pruned config;
+    the traced ``p_scheme`` values keep their global ids and are remapped to
+    branch positions at dispatch time."""
+    if cfg.scheme_group is None:
+        return _JAX_SCHEMES, tuple(range(len(_JAX_SCHEMES)))
+    gids = tuple(_scheme_id_or_raise(n) for n in cfg.scheme_group)
+    return tuple(_JAX_SCHEMES[g] for g in gids), gids
+
+
+def _local_scheme_index(gids, scheme_id):
+    """Branch position of the traced global ``scheme_id`` in a (possibly
+    pruned) stack. Ids outside the stack map to branch 0 — group membership
+    is validated host-side (`default_policy` / the fleetshard grouper)."""
+    if gids == tuple(range(len(_JAX_SCHEMES))):
+        return scheme_id
+    local = jnp.int32(0)
+    for k, g in enumerate(gids):
+        local = jnp.where(scheme_id == g, jnp.int32(k), local)
+    return local
+
+
 def default_policy(cfg: JaxSimConfig) -> dict:
     """Traced-policy scalars equivalent to the static knobs in ``cfg``."""
+    if cfg.scheme_group is not None and cfg.scheme not in cfg.scheme_group:
+        raise ValueError(f"scheme {cfg.scheme!r} is outside this config's "
+                         f"dispatch group {cfg.scheme_group}")
     return {
         "p_scheme": jnp.int32(_scheme_id_or_raise(cfg.scheme)),
         "p_selector": jnp.int32(SELECTOR_IDS[cfg.selector]),
@@ -208,14 +262,20 @@ def init_state(cfg: JaxSimConfig, policy: dict | None = None) -> dict:
 def _user_class_dispatch(cfg: JaxSimConfig, st, lba, v, nxt):
     """Class for one user write under the volume's traced scheme id.
 
-    Each registered scheme is one switch branch `(st, lba, v, nxt) ->
+    Each scheme in the config's dispatch table (the full registry, or the
+    pruned ``cfg.scheme_group``) is one switch branch `(st, lba, v, nxt) ->
     (cls, st)`; branches update only their own ``sch_<name>_*`` state slice,
     so every branch returns an identically-structured state dict and the
-    switch output is well-formed. ``nxt`` is the request's BIT annotation
-    (consumed by future-knowledge schemes, ignored elsewhere)."""
+    switch output is well-formed. A single-scheme group skips the switch
+    entirely. ``nxt`` is the request's BIT annotation (consumed by
+    future-knowledge schemes, ignored elsewhere)."""
+    table, gids = _dispatch_table(cfg)
     branches = tuple(functools.partial(jp.user_class, cfg)
-                     for _, jp in _JAX_SCHEMES)
-    return jax.lax.switch(st["p_scheme"], branches, st, lba, v, nxt)
+                     for _, jp in table)
+    if len(branches) == 1:
+        return branches[0](st, lba, v, nxt)
+    return jax.lax.switch(_local_scheme_index(gids, st["p_scheme"]),
+                          branches, st, lba, v, nxt)
 
 
 def _gc_class_dispatch(cfg: JaxSimConfig, st, victim_cls, lba_v, utime_v,
@@ -227,20 +287,26 @@ def _gc_class_dispatch(cfg: JaxSimConfig, st, victim_cls, lba_v, utime_v,
     through the Pallas classify kernel — evaluated once, selected by the
     traced scheme id inside the kernel — and their switch branches just
     return that result; stateful schemes always classify via their jnp
-    branch (they need their per-LBA tables, and must update them)."""
+    branch (they need their per-LBA tables, and must update them). Pruned
+    dispatch groups skip the kernel call when no scheme in the group is
+    elementwise, and the kernel's select chain is pruned to the group."""
+    table, gids = _dispatch_table(cfg)
     g = st["t"] - utime_v
     ew = None
-    if cfg.use_kernels:
+    if cfg.use_kernels and any(jp.elementwise is not None for _, jp in table):
         from_c1 = jnp.full(g.shape, 0, jnp.int32) + (victim_cls == 0)
         ew = _classify_kernel_call(cfg, st, jnp.zeros_like(g), g, from_c1,
                                    jnp.ones_like(g))
     branches = []
-    for _, jp in _JAX_SCHEMES:
+    for _, jp in table:
         if ew is not None and jp.elementwise is not None:
             branches.append(lambda st_, *a, _ew=ew: (_ew, st_))
         else:
             branches.append(functools.partial(jp.gc_classes, cfg))
-    return jax.lax.switch(st["p_scheme"], tuple(branches), st, victim_cls,
+    if len(branches) == 1:
+        return branches[0](st, victim_cls, lba_v, utime_v, valid_v, g)
+    return jax.lax.switch(_local_scheme_index(gids, st["p_scheme"]),
+                          tuple(branches), st, victim_cls,
                           lba_v, utime_v, valid_v, g)
 
 
@@ -282,8 +348,25 @@ def _select_victim(cfg: JaxSimConfig, st):
 
 def _classify_kernel_call(cfg: JaxSimConfig, st, v, g, from_c1, is_gc):
     from repro.kernels.classify import classify
+    _, gids = _dispatch_table(cfg)
+    sids = None if cfg.scheme_group is None else gids
     return classify(v, g, from_c1, is_gc, st["ell"],
-                    scheme_id=st["p_scheme"], interpret=cfg.kernels_interpret)
+                    scheme_id=st["p_scheme"], scheme_ids=sids,
+                    interpret=cfg.kernels_interpret)
+
+
+def _select_victims_fleet(cfg: JaxSimConfig, st):
+    """Per-volume GC victims for a batched (V-leading) fleet state — one
+    batched Pallas segsel call (grid over volumes × tiles) under
+    ``cfg.use_kernels``, else the vmapped jnp argmax."""
+    if cfg.use_kernels:
+        from repro.kernels.segsel import segment_select_batch
+        idx, _ = segment_select_batch(
+            st["seg_n"], st["seg_nvalid"], st["seg_stime"], st["seg_state"],
+            st["t"], selector_ids=st["p_selector"],
+            interpret=cfg.kernels_interpret)
+        return idx.astype(jnp.int32)
+    return jax.vmap(functools.partial(_select_victim, cfg))(st)
 
 
 # -- GC: rewrite one victim segment ------------------------------------------
@@ -297,19 +380,19 @@ def _alloc_free_ids(cfg: JaxSimConfig, st, count):
     return ids.astype(jnp.int32)
 
 
-def _gc_once(cfg: JaxSimConfig, st, victim):
-    s, C, n = cfg.segment_size, cfg.n_class_slots, cfg.n_lbas
-    victim = jnp.maximum(victim, 0)  # caller guards eligibility (victim >= 0)
-
+def _gc_bookkeeping(cfg: JaxSimConfig, st, victim):
+    """Shared head of both GC engines: ℓ estimation (Algorithm 1 lines 4-9),
+    class dispatch (letting stateful schemes update their tables under the
+    refreshed ℓ), and free-segment allocation. Returns the updated state,
+    the victim's columns, per-slot classes (-1 for dead slots), and the C
+    candidate fresh segment ids."""
+    C = cfg.n_class_slots
     lba_v = st["seg_lba"][victim]
     utime_v = st["seg_utime"][victim]
     valid_v = st["seg_valid"][victim]
-    k_total = st["seg_nvalid"][victim]
-    victim_n = st["seg_n"][victim]
     victim_cls = st["seg_cls"][victim]
 
-    # ℓ bookkeeping (Algorithm 1 lines 4-9): only Class-1 victims counted.
-    is_c1 = victim_cls == 0
+    is_c1 = victim_cls == 0          # only Class-1 victims feed ℓ
     nc = st["nc"] + jnp.where(is_c1, 1, 0)
     ell_tot = st["ell_tot"] + jnp.where(
         is_c1, (st["t"] - st["seg_ctime"][victim]).astype(jnp.float32), 0.0)
@@ -318,14 +401,205 @@ def _gc_once(cfg: JaxSimConfig, st, victim):
     nc = jnp.where(refresh, 0, nc)
     ell_tot = jnp.where(refresh, 0.0, ell_tot)
 
-    # classify (and let stateful schemes update their tables) under the
-    # refreshed ell; the victim's dead slots are masked out of the appends
     st = dict(st, ell=ell, ell_tot=ell_tot, nc=nc)
     gc_cls, st = _gc_class_dispatch(cfg, st, victim_cls, lba_v, utime_v,
                                     valid_v)
     classes = jnp.where(valid_v, gc_cls, -1)
-
     free_ids = _alloc_free_ids(cfg, st, C)
+    return st, lba_v, utime_v, classes, free_ids
+
+
+def _gc_once(cfg: JaxSimConfig, st, victim):
+    """Rewrite one victim segment: one fused segmented scatter over
+    ``(class, rank)`` keys.
+
+    The historical formulation (`_gc_once_legacy`) unrolled a Python loop
+    over the C class slots, re-running the gather/scatter cascade C times
+    per GC; here every victim slot computes its destination ``(segment,
+    offset)`` from its class's open segment and rank-within-class, and one
+    scatter per array moves all slots at once. Bit-identical to the legacy
+    unroll whenever the free pool is not exhausted (the parity gate in
+    tests/test_differential.py pins this); under exhaustion several classes
+    can alias the shared sacrificial pad row, where the fused form reads all
+    open-segment fills upfront instead of sequentially — the pad row's
+    degraded (logical-not-physical) accounting differs in that corner, but
+    every engine runs the same program, live rows are never corrupted, and
+    ``overflow`` still counts every pad allocation."""
+    s, C, n = cfg.segment_size, cfg.n_class_slots, cfg.n_lbas
+    victim = jnp.maximum(victim, 0)  # caller guards eligibility (victim >= 0)
+    k_total = st["seg_nvalid"][victim]
+    victim_n = st["seg_n"][victim]
+    st, lba_v, utime_v, classes, free_ids = _gc_bookkeeping(cfg, st, victim)
+    drop = jnp.int32(cfg.n_rows)     # out-of-range row => scatter dropped
+
+    # per-slot (class, rank) keys: rank = position among same-class live slots
+    slot_cls = jnp.clip(classes, 0, C - 1)
+    onehot = (classes[:, None]
+              == jnp.arange(C, dtype=jnp.int32)[None, :]).astype(jnp.int32)
+    cum = jnp.cumsum(onehot, axis=0)                      # (s, C)
+    rank = jnp.take_along_axis(cum, slot_cls[:, None], 1)[:, 0] - 1
+    k = cum[-1]                                           # (C,) per-class count
+
+    # per-class destinations: the class's current open segment, spilling into
+    # a fresh free segment once full. Open sids, fresh ids, and the victim
+    # are pairwise distinct (state 1 / 0 / 2) until exhaustion aliases fresh
+    # slots onto the pad row. Padded class slots (>= p_classes) never match
+    # any slot (k = 0) and their stale open_sid is masked out of every
+    # metadata write below.
+    cls_active = jnp.arange(C, dtype=jnp.int32) < st["p_classes"]
+    sids = st["open_sid"]
+    n0 = st["seg_n"][sids]
+    room = jnp.maximum(s - n0, 0)    # clamp: a pad-row open segment can sit
+    #                                  past capacity; negative room would
+    #                                  credit phantom blocks to the fresh row
+    took1 = jnp.minimum(k, room)
+    took2 = k - took1
+
+    live = classes >= 0
+    in_first = live & (rank < room[slot_cls])
+    dst_sid = jnp.where(live, jnp.where(in_first, sids[slot_cls],
+                                        free_ids[slot_cls]), drop)
+    dst_off = jnp.where(in_first, n0[slot_cls] + rank, rank - room[slot_cls])
+    seg_lba = st["seg_lba"].at[dst_sid, dst_off].set(lba_v, mode="drop")
+    seg_utime = st["seg_utime"].at[dst_sid, dst_off].set(utime_v, mode="drop")
+    seg_valid = st["seg_valid"].at[dst_sid, dst_off].set(True, mode="drop")
+    dst_lba = jnp.where(live, lba_v, n)                  # n => dropped
+    loc_seg = st["loc_seg"].at[dst_lba].set(dst_sid, mode="drop")
+    loc_off = st["loc_off"].at[dst_lba].set(dst_off, mode="drop")
+
+    # per-class metadata, as masked C-vector scatters (drop = no-op): fill
+    # counters, first-block creation time, seal-if-full + promote-fresh
+    seg_n = st["seg_n"].at[sids].add(took1).at[free_ids].add(took2)
+    seg_nvalid = st["seg_nvalid"].at[sids].add(took1).at[free_ids].add(took2)
+    seg_ctime = st["seg_ctime"].at[
+        jnp.where((n0 == 0) & (k > 0), sids, drop)].set(st["t"], mode="drop")
+    sealed = cls_active & (n0 + took1 >= s)
+    ssid = jnp.where(sealed, sids, drop)
+    seg_state = st["seg_state"].at[ssid].set(2, mode="drop")
+    seg_stime = st["seg_stime"].at[ssid].set(st["t"], mode="drop")
+    pfresh = jnp.where(sealed, free_ids, drop)           # promote to open
+    seg_state = seg_state.at[pfresh].set(1, mode="drop")
+    seg_cls = st["seg_cls"].at[pfresh].set(
+        jnp.arange(C, dtype=jnp.int32), mode="drop")
+    seg_ctime = seg_ctime.at[pfresh].set(st["t"], mode="drop")
+    open_sid = jnp.where(sealed, free_ids, sids)
+    used_pad = (free_ids == cfg.pad_row) & ((took2 > 0) | sealed)
+    overflow = st["overflow"] + jnp.sum(used_pad.astype(jnp.int32))
+
+    # over-capacity appends to the pad row are dropped; cap its fill count
+    seg_n = seg_n.at[cfg.pad_row].min(s)
+
+    # release the victim; the sacrificial pad row (reachable as a victim only
+    # after free-pool exhaustion promoted it) returns to reserved state 3,
+    # never to the free pool — _alloc_free_ids' fill must stay "never free"
+    seg_state = seg_state.at[victim].set(
+        jnp.where(victim == cfg.pad_row, 3, 0))
+    seg_valid = seg_valid.at[victim].set(False)
+    seg_n = seg_n.at[victim].set(0)
+    seg_nvalid = seg_nvalid.at[victim].set(0)
+
+    # total_valid is untouched: GC moves valid blocks, it never creates or
+    # destroys them (the conservation property in tests/test_property.py)
+    return dict(
+        st,
+        seg_lba=seg_lba, seg_utime=seg_utime, seg_valid=seg_valid,
+        seg_n=seg_n, seg_nvalid=seg_nvalid, seg_cls=seg_cls,
+        seg_state=seg_state, seg_ctime=seg_ctime, seg_stime=seg_stime,
+        open_sid=open_sid, loc_seg=loc_seg, loc_off=loc_off,
+        total_occ=st["total_occ"] - victim_n + k_total,
+        gc_writes=st["gc_writes"] + k_total,
+        reclaimed=st["reclaimed"] + 1,
+        overflow=overflow,
+        class_gc=st["class_gc"] + k,
+    )
+
+
+def _gp(st):
+    occ = jnp.maximum(st["total_occ"], 1).astype(jnp.float32)
+    return 1.0 - st["total_valid"].astype(jnp.float32) / occ
+
+
+def _maybe_gc(cfg: JaxSimConfig, st):
+    """GC trigger loop, tick formulation: the cheap GP guard alone gates the
+    loop, and victim selection (a full masked argmax over the segment pool)
+    moved *inside* the body — the legacy formulation paid that argmax at loop
+    entry on every user write, GC or not. A triggering state with no
+    eligible victim sets ``stalled`` after one selection and exits (the
+    legacy loop's ``victim >= 0`` entry guard, one iteration later)."""
+    def cond(carry):
+        st, i, stalled = carry
+        return (_gp(st) > st["p_gp"]) & ~stalled & (i < cfg.max_gc_per_step)
+
+    def body(carry):
+        st, i, stalled = carry
+        victim = _select_victim(cfg, st)
+        st = jax.lax.cond(victim >= 0,
+                          lambda s: _gc_once(cfg, s, victim),
+                          lambda s: s, st)
+        return st, i + 1, victim < 0
+
+    st, _, _ = jax.lax.while_loop(
+        cond, body, (st, jnp.int32(0), jnp.asarray(False)))
+    return st
+
+
+def fleet_gc_tick(cfg: JaxSimConfig, st, step_active=None):
+    """Synchronized fleet-level GC tick over a batched (V-leading) state.
+
+    One ``lax.while_loop`` serves the whole fleet: each tick selects a
+    victim and runs the fused `_gc_once` for every volume whose garbage
+    proportion exceeds its traced ``p_gp`` threshold; volumes below
+    threshold (or stalled, or on a padded no-op step — ``step_active``) take
+    a masked exact no-op, their state passed through bit-unchanged. The GP
+    guard is evaluated *before* any victim selection, so a step where no
+    volume triggers costs one reduction, not a fleet of segment argmaxes —
+    and the loop itself runs zero iterations.
+
+    Per volume this replays exactly the `_maybe_gc` iteration sequence (a
+    volume's triggering ticks are a prefix of the tick loop, so the shared
+    tick counter enforces the same ``max_gc_per_step`` budget), which is
+    what keeps fleet replays bit-identical to single-volume runs."""
+    def need(st, stalled):
+        over = jax.vmap(_gp)(st) > st["p_gp"]
+        over = over & ~stalled
+        if step_active is not None:
+            over = over & step_active
+        return over
+
+    def cond(carry):
+        st, i, stalled = carry
+        return jnp.any(need(st, stalled)) & (i < cfg.max_gc_per_step)
+
+    def body(carry):
+        st, i, stalled = carry
+        active = need(st, stalled)
+        victims = _select_victims_fleet(cfg, st)
+        do = active & (victims >= 0)
+        new = jax.vmap(functools.partial(_gc_once, cfg))(st, victims)
+        st = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(do.reshape(do.shape + (1,) * (a.ndim - 1)),
+                                   a, b), new, st)
+        return st, i + 1, stalled | (active & (victims < 0))
+
+    V = st["t"].shape[0]
+    st, _, _ = jax.lax.while_loop(
+        cond, body, (st, jnp.int32(0), jnp.zeros(V, bool)))
+    return st
+
+
+# -- legacy GC engine ----------------------------------------------------------
+# The pre-tick formulation (victim selection at loop entry on every user
+# write; per-class unrolled rewrite), retained verbatim as (a) the baseline
+# that `benchmarks/run.py --mode gcbench` measures the tick engine against
+# and (b) a bitwise parity oracle for the fused `_gc_once` rewrite
+# (tests/test_differential.py). Select with ``JaxSimConfig(gc_engine="legacy")``.
+
+def _gc_once_legacy(cfg: JaxSimConfig, st, victim):
+    s, C, n = cfg.segment_size, cfg.n_class_slots, cfg.n_lbas
+    victim = jnp.maximum(victim, 0)
+    k_total = st["seg_nvalid"][victim]
+    victim_n = st["seg_n"][victim]
+    st, lba_v, utime_v, classes, free_ids = _gc_bookkeeping(cfg, st, victim)
 
     seg_lba, seg_utime, seg_valid = st["seg_lba"], st["seg_utime"], st["seg_valid"]
     seg_n, seg_nvalid = st["seg_n"], st["seg_nvalid"]
@@ -336,29 +610,22 @@ def _gc_once(cfg: JaxSimConfig, st, victim):
     overflow = st["overflow"]
 
     for cls in range(C):  # static unroll; each class's blocks batch-appended
-        # padded class slots (cls >= the volume's own class count) must be
-        # exact no-ops: their k is always 0 (the classifier never emits an
-        # inactive class id), but the seal/promote logic below also reads
-        # seg_n through a stale open_sid that may now belong to another
-        # class's recycled row — gate it so nothing is touched.
+        # padded class slots must be exact no-ops: their k is always 0, but
+        # the seal/promote logic reads seg_n through a stale open_sid that
+        # may now belong to another class's recycled row — gate it.
         cls_active = jnp.int32(cls) < st["p_classes"]
         mask = classes == cls
         ranks = jnp.cumsum(mask) - 1
         k = jnp.where(mask.any(), jnp.max(jnp.where(mask, ranks, -1)) + 1, 0)
         sid = open_sid[cls]
         n0 = seg_n[sid]
-        # clamp: under exhaustion the pad row can be this class's open
-        # segment at full capacity; negative room would otherwise credit
-        # phantom blocks (took2 > k) to the fresh segment
         room = jnp.maximum(s - n0, 0)
-        # first block appended to an empty open segment sets its creation time
         seg_ctime = seg_ctime.at[sid].set(
             jnp.where((n0 == 0) & (k > 0), st["t"], seg_ctime[sid]))
         in_first = mask & (ranks < room)
         in_second = mask & ~in_first
         fresh = free_ids[cls]
 
-        # scatter first-part blocks into the current open segment
         p1 = jnp.where(in_first, n0 + ranks, s)        # s => dropped
         seg_lba = seg_lba.at[sid, p1].set(lba_v, mode="drop")
         seg_utime = seg_utime.at[sid, p1].set(utime_v, mode="drop")
@@ -367,7 +634,6 @@ def _gc_once(cfg: JaxSimConfig, st, victim):
         loc_seg = loc_seg.at[dst1].set(sid, mode="drop")
         loc_off = loc_off.at[dst1].set(n0 + ranks, mode="drop")
 
-        # overflow into a fresh (reserved) free segment
         p2 = jnp.where(in_second, ranks - room, s)
         seg_lba = seg_lba.at[fresh, p2].set(lba_v, mode="drop")
         seg_utime = seg_utime.at[fresh, p2].set(utime_v, mode="drop")
@@ -384,7 +650,6 @@ def _gc_once(cfg: JaxSimConfig, st, victim):
         seg_nvalid = seg_nvalid.at[fresh].add(took2)
         class_gc = class_gc.at[cls].add(k)
 
-        # seal-if-full + promote the fresh segment to open
         sealed_now = cls_active & (seg_n[sid] >= s)
         seg_state = seg_state.at[sid].set(jnp.where(sealed_now, 2, seg_state[sid]))
         seg_stime = seg_stime.at[sid].set(jnp.where(sealed_now, st["t"], seg_stime[sid]))
@@ -396,43 +661,31 @@ def _gc_once(cfg: JaxSimConfig, st, victim):
         used_pad = (fresh == cfg.pad_row) & ((took2 > 0) | promote)
         overflow = overflow + used_pad.astype(jnp.int32)
 
-    # over-capacity appends to the pad row are dropped; cap its fill count
     seg_n = seg_n.at[cfg.pad_row].min(s)
-
-    # release the victim; the sacrificial pad row (reachable as a victim only
-    # after free-pool exhaustion promoted it) returns to reserved state 3,
-    # never to the free pool — _alloc_free_ids' fill must stay "never free"
     seg_state = seg_state.at[victim].set(
         jnp.where(victim == cfg.pad_row, 3, 0))
     seg_valid = seg_valid.at[victim].set(False)
     seg_n = seg_n.at[victim].set(0)
     seg_nvalid = seg_nvalid.at[victim].set(0)
 
-    st = dict(
+    return dict(
         st,
         seg_lba=seg_lba, seg_utime=seg_utime, seg_valid=seg_valid,
         seg_n=seg_n, seg_nvalid=seg_nvalid, seg_cls=seg_cls,
         seg_state=seg_state, seg_ctime=seg_ctime, seg_stime=seg_stime,
         open_sid=open_sid, loc_seg=loc_seg, loc_off=loc_off,
         total_occ=st["total_occ"] - victim_n + k_total,
-        total_valid=st["total_valid"] - k_total + k_total,  # net zero: moves
         gc_writes=st["gc_writes"] + k_total,
         reclaimed=st["reclaimed"] + 1,
         overflow=overflow,
-        ell=ell, ell_tot=ell_tot, nc=nc, class_gc=class_gc,
+        class_gc=class_gc,
     )
-    return st
 
 
-def _gp(st):
-    occ = jnp.maximum(st["total_occ"], 1).astype(jnp.float32)
-    return 1.0 - st["total_valid"].astype(jnp.float32) / occ
-
-
-def _maybe_gc(cfg: JaxSimConfig, st):
+def _maybe_gc_legacy(cfg: JaxSimConfig, st):
     # victim selection runs once per iteration and is carried into the body:
-    # its -1 sentinel gates the loop (no separate eligibility rescan) and
-    # names the victim for _gc_once, for the kernel and jnp paths alike.
+    # its -1 sentinel gates the loop and names the victim — which also means
+    # the argmax is paid at loop entry on every user write, GC or not.
     def cond(carry):
         st, i, victim = carry
         return (_gp(st) > st["p_gp"]) & (victim >= 0) \
@@ -440,7 +693,7 @@ def _maybe_gc(cfg: JaxSimConfig, st):
 
     def body(carry):
         st, i, victim = carry
-        st = _gc_once(cfg, st, victim)
+        st = _gc_once_legacy(cfg, st, victim)
         return st, i + 1, _select_victim(cfg, st)
 
     st, _, _ = jax.lax.while_loop(
@@ -450,7 +703,7 @@ def _maybe_gc(cfg: JaxSimConfig, st):
 
 # -- per-user-write step -------------------------------------------------------
 
-def _user_step(cfg: JaxSimConfig, st, lba, nxt):
+def _user_write(cfg: JaxSimConfig, st, lba, nxt):
     s, C, n = cfg.segment_size, cfg.n_class_slots, cfg.n_lbas
     t = st["t"]
 
@@ -506,6 +759,15 @@ def _user_step(cfg: JaxSimConfig, st, lba, nxt):
         + (sealed_now & (fresh == cfg.pad_row)).astype(jnp.int32),
         class_user=st["class_user"].at[cls].add(1),
     )
+    return st
+
+
+def _user_step(cfg: JaxSimConfig, st, lba, nxt):
+    """One user write followed by the GC trigger loop (the single-volume
+    scan step; fleet mode runs the write vmapped and GC as a fleet tick)."""
+    st = _user_write(cfg, st, lba, nxt)
+    if cfg.gc_engine == "legacy":
+        return _maybe_gc_legacy(cfg, st)
     return _maybe_gc(cfg, st)
 
 
@@ -525,7 +787,12 @@ def fk_annotations(trace) -> np.ndarray:
 def _policy_scheme_id(cfg: JaxSimConfig, policy: dict | None) -> int:
     if policy is None:
         return _scheme_id_or_raise(cfg.scheme)
-    return int(np.asarray(policy["p_scheme"]))
+    sid = int(np.asarray(policy["p_scheme"]))
+    if cfg.scheme_group is not None \
+            and SCHEME_NAMES[sid] not in cfg.scheme_group:
+        raise ValueError(f"policy scheme {SCHEME_NAMES[sid]!r} is outside "
+                         f"this config's dispatch group {cfg.scheme_group}")
+    return sid
 
 
 def _single_annotations(trace: np.ndarray, cfg: JaxSimConfig,
@@ -626,9 +893,17 @@ def pad_fleet(traces) -> np.ndarray:
 
 
 def _masked_step(cfg: JaxSimConfig, st, lba, nxt):
-    """One user write, or a state-preserving no-op for pad entries (-1)."""
+    """One full user step (write + GC), or a state-preserving no-op for pad
+    entries (-1) — the legacy fleet engine's per-volume step."""
     active = lba >= 0
     new = _user_step(cfg, st, jnp.maximum(lba, 0), nxt)
+    return jax.tree_util.tree_map(lambda a, b: jnp.where(active, a, b), new, st)
+
+
+def _masked_write(cfg: JaxSimConfig, st, lba, nxt):
+    """One user write (GC deferred to the fleet tick), or a no-op for pads."""
+    active = lba >= 0
+    new = _user_write(cfg, st, jnp.maximum(lba, 0), nxt)
     return jax.tree_util.tree_map(lambda a, b: jnp.where(active, a, b), new, st)
 
 
@@ -646,15 +921,31 @@ def fleet_body(cfg: JaxSimConfig, masked: bool, traces: jnp.ndarray,
     :func:`default_policy` for the keys) — each volume runs its own scheme /
     selector / GP threshold / nc window. ``nxts`` is the (V, T) BIT
     annotation matrix (see :func:`fleet_annotations`). Exposed un-jitted so
-    `core/fleetshard.py` can wrap it in `shard_map` over the fleet axis."""
-    st = jax.vmap(lambda pol: init_state(cfg, pol))(policies)
-    # ``masked`` is static: uniform-length fleets (no -1 padding anywhere)
-    # skip the per-step state select entirely.
-    inner = _masked_step if masked else _user_step
+    `core/fleetshard.py` can wrap it in `shard_map` over the fleet axis.
 
-    def step(st, x):
-        lbas, nxs = x
-        return jax.vmap(functools.partial(inner, cfg))(st, lbas, nxs), None
+    Tick engine (default): each scan step vmaps the GC-free user write and
+    then runs one fleet-level :func:`fleet_gc_tick` — the GP guard gates the
+    whole GC machinery, so a step where no volume triggers skips victim
+    selection entirely. The legacy engine vmaps the full per-volume step
+    (write + `_maybe_gc_legacy`), which pays a per-volume victim argmax on
+    every user write. ``masked`` is static: uniform-length fleets (no -1
+    padding anywhere) skip the per-step state select entirely."""
+    st = jax.vmap(lambda pol: init_state(cfg, pol))(policies)
+
+    if cfg.gc_engine == "legacy":
+        inner = _masked_step if masked else _user_step
+
+        def step(st, x):
+            lbas, nxs = x
+            return jax.vmap(functools.partial(inner, cfg))(st, lbas, nxs), None
+    else:
+        write = _masked_write if masked else _user_write
+
+        def step(st, x):
+            lbas, nxs = x
+            st = jax.vmap(functools.partial(write, cfg))(st, lbas, nxs)
+            st = fleet_gc_tick(cfg, st, (lbas >= 0) if masked else None)
+            return st, None
 
     st, _ = jax.lax.scan(step, st, (traces.T, nxts.T))
     return st

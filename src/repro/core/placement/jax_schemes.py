@@ -101,17 +101,23 @@ def _from_elementwise(fn) -> JaxPlacement:
     return JaxPlacement(init_state, user_class, gc_classes, elementwise=fn)
 
 
-def elementwise_chain(scheme_id, v, g, from_c1, is_gc, ell):
+def elementwise_chain(scheme_id, v, g, from_c1, is_gc, ell,
+                      scheme_ids=None):
     """Classes for every *elementwise* registered scheme, selected by the
     runtime ``scheme_id`` scalar — the body of the Pallas classify kernel
     (and its jnp oracle). Ids without an elementwise form yield class 0;
-    their branches never consult this chain."""
+    their branches never consult this chain. ``scheme_ids`` (static tuple
+    of global dense ids) prunes the chain to those schemes — the grouped
+    dispatch path evaluates one scheme's classifier, not the whole zoo."""
     from .registry import jax_schemes
     out = jnp.zeros(jnp.shape(v), jnp.int32)
     for sid, (sd, jp) in enumerate(jax_schemes()):
-        if jp.elementwise is not None:
-            out = jnp.where(scheme_id == sid,
-                            jp.elementwise(v, g, from_c1, is_gc, ell), out)
+        if jp.elementwise is None:
+            continue
+        if scheme_ids is not None and sid not in scheme_ids:
+            continue
+        out = jnp.where(scheme_id == sid,
+                        jp.elementwise(v, g, from_c1, is_gc, ell), out)
     return out
 
 

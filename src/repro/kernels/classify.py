@@ -33,22 +33,32 @@ LANE = 128
 TILE_ROWS = 8
 
 
-def _classify_kernel(ell_ref, scheme_ref, v_ref, g_ref, from_c1_ref, is_gc_ref,
-                     out_ref):
-    out_ref[...] = elementwise_chain(
-        scheme_ref[0, 0],
-        v_ref[...].astype(jnp.float32), g_ref[...].astype(jnp.float32),
-        from_c1_ref[...], is_gc_ref[...], ell_ref[0, 0])
+def _make_classify_kernel(scheme_ids: tuple[int, ...] | None):
+    def _classify_kernel(ell_ref, scheme_ref, v_ref, g_ref, from_c1_ref,
+                         is_gc_ref, out_ref):
+        out_ref[...] = elementwise_chain(
+            scheme_ref[0, 0],
+            v_ref[...].astype(jnp.float32), g_ref[...].astype(jnp.float32),
+            from_c1_ref[...], is_gc_ref[...], ell_ref[0, 0],
+            scheme_ids=scheme_ids)
+    return _classify_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("scheme_ids", "interpret"))
 def classify(v: jax.Array, g: jax.Array, from_c1: jax.Array, is_gc: jax.Array,
              ell: jax.Array, *, scheme_id: jax.Array | None = None,
+             scheme_ids: tuple[int, ...] | None = None,
              interpret: bool = True) -> jax.Array:
     """Placement class ids for a batch of writes. 1-D equal-length inputs.
     ``scheme_id`` (traced int32 scalar) selects the scheme per call/volume;
     omitted = SepBIT (the historical behavior). Only elementwise-registered
-    scheme ids produce meaningful classes; others yield class 0."""
+    scheme ids produce meaningful classes; others yield class 0.
+
+    ``scheme_ids`` (static tuple of global dense ids) prunes the kernel's
+    select chain to those schemes — the grouped-dispatch path compiles one
+    kernel per scheme group instead of chaining the whole zoo. Ids inside
+    the tuple classify identically to the full chain; a runtime
+    ``scheme_id`` outside the tuple yields class 0."""
     (B,) = v.shape
     tile = TILE_ROWS * LANE
     Bp = ((B + tile - 1) // tile) * tile
@@ -63,7 +73,7 @@ def classify(v: jax.Array, g: jax.Array, from_c1: jax.Array, is_gc: jax.Array,
     spec = pl.BlockSpec((TILE_ROWS, LANE), lambda i: (i, 0))
     scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
     out = pl.pallas_call(
-        _classify_kernel,
+        _make_classify_kernel(scheme_ids),
         grid=(Bp // tile,),
         in_specs=[scalar, scalar, spec, spec, spec, spec],
         out_specs=spec,

@@ -12,10 +12,10 @@ import jax.numpy as jnp
 
 from .classify import classify
 from .decode_attn import flash_decode
-from .segsel import segment_select
+from .segsel import segment_select, segment_select_batch
 from .zipfprob import pr_gc_bit_kernel, pr_user_bit_kernel, zipf_bit_sums
 
 __all__ = [
-    "segment_select", "classify", "zipf_bit_sums",
+    "segment_select", "segment_select_batch", "classify", "zipf_bit_sums",
     "pr_user_bit_kernel", "pr_gc_bit_kernel", "flash_decode",
 ]

@@ -48,21 +48,13 @@ def _score_tile(n, nv, stime, state, t, selector_id):
     return jnp.where(eligible, score, -jnp.inf)
 
 
-def _segsel_kernel(t_ref, sel_ref, n_ref, nv_ref, stime_ref, state_ref,
-                   score_ref, idx_ref):
-    i = pl.program_id(0)
-
-    @pl.when(i == 0)
-    def _init():
-        score_ref[0, 0] = -jnp.inf   # running max score
-        idx_ref[0, 0] = -1           # running argmax (flat index, exact int32:
-        #                              a float32 carry would round indices
-        #                              above 2^24 to a neighboring segment)
-
-    t = t_ref[0, 0]
-    score = _score_tile(n_ref[...], nv_ref[...], stime_ref[...], state_ref[...],
-                        t, sel_ref[0, 0])
-    base = i * TILE_ROWS * LANE
+def _fold_tile_argmax(score, base, score_ref, idx_ref):
+    """Fold one scored (rows, LANE) tile into the running (max, argmax)
+    carried in the (1, 1) output blocks. The argmax carry is exact int32 —
+    a float32 carry would round flat indices above 2^24 to a neighboring
+    segment — and ties resolve to the lowest index (matching jnp.argmax).
+    Shared by the single-volume and batched kernels so the tie-break
+    contract can't drift between them."""
     r = jax.lax.broadcasted_iota(jnp.int32, score.shape, 0)
     c = jax.lax.broadcasted_iota(jnp.int32, score.shape, 1)
     flat = base + r * LANE + c
@@ -74,6 +66,20 @@ def _segsel_kernel(t_ref, sel_ref, n_ref, nv_ref, stime_ref, state_ref,
     take = local_max > best
     score_ref[0, 0] = jnp.where(take, local_max, best)
     idx_ref[0, 0] = jnp.where(take, local_arg, idx_ref[0, 0])
+
+
+def _segsel_kernel(t_ref, sel_ref, n_ref, nv_ref, stime_ref, state_ref,
+                   score_ref, idx_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        score_ref[0, 0] = -jnp.inf
+        idx_ref[0, 0] = -1
+
+    score = _score_tile(n_ref[...], nv_ref[...], stime_ref[...], state_ref[...],
+                        t_ref[0, 0], sel_ref[0, 0])
+    _fold_tile_argmax(score, i * TILE_ROWS * LANE, score_ref, idx_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("selector", "interpret"))
@@ -123,4 +129,60 @@ def segment_select(seg_n: jax.Array, seg_nvalid: jax.Array, seg_stime: jax.Array
       jnp.asarray(selector_id, jnp.int32).reshape(1, 1), n2, nv2, st2, state2)
     score = out_score[0, 0]
     idx = out_idx[0, 0]
+    return jnp.where(jnp.isfinite(score), idx, -1), score
+
+
+def _segsel_batch_kernel(t_ref, sel_ref, n_ref, nv_ref, stime_ref, state_ref,
+                         score_ref, idx_ref):
+    i = pl.program_id(1)          # tile index within the current volume
+
+    @pl.when(i == 0)              # fresh running (max, argmax) per volume
+    def _init():
+        score_ref[0, 0] = -jnp.inf
+        idx_ref[0, 0] = -1
+
+    score = _score_tile(n_ref[0], nv_ref[0], stime_ref[0], state_ref[0],
+                        t_ref[0, 0], sel_ref[0, 0])
+    _fold_tile_argmax(score, i * TILE_ROWS * LANE, score_ref, idx_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def segment_select_batch(seg_n: jax.Array, seg_nvalid: jax.Array,
+                         seg_stime: jax.Array, seg_state: jax.Array,
+                         t: jax.Array, *, selector_ids: jax.Array,
+                         interpret: bool = True):
+    """Victim argmax for a whole fleet in one kernel launch: (V, S) int32
+    segment metadata, per-volume clocks ``t`` and ``selector_ids`` (both
+    (V,)). The fleet GC tick's entry point — one pallas_call with a
+    (volumes × tiles) grid instead of V separate (vmapped) launches; each
+    volume's running (max, argmax) lives in its row of the output block,
+    reset when its first tile arrives. Returns ((V,) idx, (V,) score);
+    idx == -1 where no segment is eligible. Scores/tie-breaks are identical
+    to :func:`segment_select` and the jnp oracle."""
+    V, S = seg_n.shape
+    tile = TILE_ROWS * LANE
+    Sp = ((S + tile - 1) // tile) * tile
+    pad = Sp - S
+
+    def prep(x):
+        x = jnp.pad(x.astype(jnp.int32), ((0, 0), (0, pad)))
+        return x.reshape(V, Sp // LANE, LANE)
+
+    n2, nv2, st2, state2 = map(prep, (seg_n, seg_nvalid, seg_stime, seg_state))
+    scalar = pl.BlockSpec((1, 1), lambda v, i: (v, 0))
+    spec = pl.BlockSpec((1, TILE_ROWS, LANE), lambda v, i: (v, i, 0))
+
+    out_score, out_idx = pl.pallas_call(
+        _segsel_batch_kernel,
+        grid=(V, Sp // tile),
+        in_specs=[scalar, scalar, spec, spec, spec, spec],
+        out_specs=[pl.BlockSpec((1, 1), lambda v, i: (v, 0)),
+                   pl.BlockSpec((1, 1), lambda v, i: (v, 0))],
+        out_shape=[jax.ShapeDtypeStruct((V, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((V, 1), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray(t, jnp.int32).reshape(V, 1),
+      jnp.asarray(selector_ids, jnp.int32).reshape(V, 1), n2, nv2, st2, state2)
+    score = out_score[:, 0]
+    idx = out_idx[:, 0]
     return jnp.where(jnp.isfinite(score), idx, -1), score

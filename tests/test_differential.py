@@ -194,6 +194,56 @@ def test_hetero_kernel_path_matches_jnp():
         assert k["class_gc_writes"] == j["class_gc_writes"]
 
 
+def test_grouped_matches_ungrouped_fleet_bitwise(oracle):
+    """Scheme-grouped dispatch (per-scheme programs with pruned branch
+    stacks, the default) must reproduce the single ungrouped program — every
+    volume's full final state, array for array. Together with the
+    single-volume tests above this pins grouping == ungrouped == single."""
+    traces, policy, res, st = oracle
+    res_u, st_u = simulate_fleet_hetero(traces, BASE, policy, group=False,
+                                        return_state=True)
+    assert res["fleet"]["n_scheme_groups"] == len(
+        {sch for sch, _ in COMBOS})
+    assert res_u["fleet"]["n_scheme_groups"] == 1
+    for a, b in zip(res["volumes"], res_u["volumes"]):
+        assert a == b
+    for key in st:
+        np.testing.assert_array_equal(
+            np.asarray(st[key]), np.asarray(st_u[key]),
+            err_msg=f"state[{key}] diverged between grouped and ungrouped")
+
+
+def test_legacy_gc_engine_matches_tick_bitwise():
+    """The fused-_gc_once tick engine must be bit-identical to the retained
+    legacy engine (entry-point victim selection, per-class unrolled rewrite)
+    — full final state, on a mixed-policy fleet and single volumes alike.
+    This is the regression oracle for the fused GC rewrite; the engines may
+    diverge only in the free-pool-exhaustion corner (shared pad row), which
+    a correctly sized config never enters."""
+    from repro.core.tracegen import make_fleet
+    traces = make_fleet("mixed", 4, N, 2 * N, jitter=0.2, seed=41)
+    policy = encode_policies(4, schemes=["sepbit", "dac", "nosep", "fk"],
+                             selectors=["cost_benefit", "greedy",
+                                        "cost_benefit", "greedy"],
+                             gp_thresholds=[0.12, 0.15, 0.20, 0.15])
+    legacy = dataclasses.replace(BASE, gc_engine="legacy")
+    r_t, st_t = simulate_fleet_hetero(traces, BASE, policy, return_state=True)
+    r_l, st_l = simulate_fleet_hetero(traces, legacy, policy, group=False,
+                                      return_state=True)
+    for a, b in zip(r_t["volumes"], r_l["volumes"]):
+        assert a == b
+    for key in st_t:
+        np.testing.assert_array_equal(
+            np.asarray(st_t[key]), np.asarray(st_l[key]),
+            err_msg=f"state[{key}] diverged between tick and legacy engines")
+    for i in (0, 1):
+        cfg_i = matching_single_config(BASE, policy, i)
+        s_t = simulate_jax(traces[i], cfg_i)
+        s_l = simulate_jax(traces[i],
+                           dataclasses.replace(cfg_i, gc_engine="legacy"))
+        assert s_t == s_l
+
+
 def test_registry_combos_cover_all_jax_schemes():
     """The gate's scheme axis is the registry, not a hand-kept list."""
     assert {sch for sch, _ in COMBOS} \

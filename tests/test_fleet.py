@@ -94,6 +94,50 @@ def test_kernel_greedy_selector_single():
     assert rk["wa"] == rj["wa"]
 
 
+def test_fleet_gc_tick_below_threshold_is_noop():
+    """The fleet GC tick must pass volumes whose garbage proportion is at or
+    below their p_gp threshold through bit-unchanged, and must conserve
+    valid blocks (GC moves them, never creates or destroys them) for the
+    volumes it does collect."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.fleetshard import encode_policies, hetero_config, simulate_fleet_hetero
+    from repro.core.jaxsim import fleet_gc_tick
+    traces = make_fleet("mixed", 4, N, 2 * N, seed=7)
+    pol = encode_policies(4, schemes="sepbit", selectors="cost_benefit",
+                          gp_thresholds=0.15)
+    cfg_h = hetero_config(CFG, pol)
+    _, st = simulate_fleet_hetero(traces, CFG, pol, return_state=True)
+    st = jax.tree_util.tree_map(jnp.asarray, st)
+
+    # after a full replay every volume sits at/below threshold: a tick with
+    # unchanged thresholds must be a fleet-wide exact no-op
+    ticked = fleet_gc_tick(cfg_h, st)
+    for key in st:
+        np.testing.assert_array_equal(np.asarray(ticked[key]),
+                                      np.asarray(st[key]),
+                                      err_msg=f"state[{key}] changed")
+
+    # drop volumes 0 and 2 to a zero threshold: they must GC (conserving
+    # their valid blocks) while volumes 1 and 3 stay bit-unchanged
+    forced = dict(st, p_gp=jnp.asarray([0.0, 1.0, 0.0, 1.0], jnp.float32))
+    ticked = fleet_gc_tick(cfg_h, forced)
+    valid_before = np.asarray(st["seg_valid"]).sum(axis=(1, 2))
+    valid_after = np.asarray(ticked["seg_valid"]).sum(axis=(1, 2))
+    np.testing.assert_array_equal(valid_before, valid_after)
+    np.testing.assert_array_equal(np.asarray(ticked["total_valid"]),
+                                  np.asarray(st["total_valid"]))
+    assert int(ticked["reclaimed"][0]) > int(st["reclaimed"][0])
+    for key in st:
+        if key == "p_gp":
+            continue
+        a, b = np.asarray(ticked[key]), np.asarray(st[key])
+        for i in (1, 3):
+            np.testing.assert_array_equal(
+                a[i], b[i], err_msg=f"below-threshold volume {i}: "
+                                    f"state[{key}] changed")
+
+
 def test_alloc_overflow_guard():
     """Exhausting the free-segment pool must not wrap scatters into live
     rows: overflow lands in the sacrificial pad row and is counted."""

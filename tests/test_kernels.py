@@ -71,6 +71,51 @@ def test_segsel_vmapped_per_volume_selectors():
         assert int(i1[v]) == int(i2)
 
 
+def test_segsel_batch_matches_ref():
+    """The fleet-tick batched entry (one pallas_call, volumes × tiles grid)
+    must match the per-volume reference for mixed selectors and per-volume
+    clocks — including all-ineligible volumes (idx -1)."""
+    V, S = 5, 640
+    n = RNG.integers(0, 129, (V, S))
+    nv = np.minimum(RNG.integers(0, 129, (V, S)), n)
+    st = RNG.integers(0, 10_000, (V, S))
+    state = RNG.integers(0, 3, (V, S))
+    n[4], nv[4], state[4] = 0, 0, 0        # no eligible segment
+    sids = jnp.asarray([0, 1, 0, 1, 1], jnp.int32)
+    t = jnp.asarray([20_000, 15_000, 9_000, 20_000, 100], jnp.int32)
+    i1, s1 = ops.segment_select_batch(
+        *map(jnp.asarray, (n, nv, st, state)), t, selector_ids=sids)
+    assert i1.shape == (V,)
+    for v in range(V):
+        i2, s2 = ref.segment_select_ref(
+            *map(jnp.asarray, (n[v], nv[v], st[v], state[v])), t[v],
+            selector="greedy" if int(sids[v]) == 0 else "cost_benefit")
+        assert int(i1[v]) == int(i2)
+        if int(i2) != -1:
+            np.testing.assert_allclose(float(s1[v]), float(s2), rtol=1e-5)
+    assert int(i1[4]) == -1
+
+
+def test_segsel_batch_matches_single_kernel():
+    """Batched and single-volume kernels agree exactly (the tick engine uses
+    the batched form, single-volume replay the scalar form)."""
+    V, S = 3, 1500
+    n = RNG.integers(0, 129, (V, S))
+    nv = np.minimum(RNG.integers(0, 129, (V, S)), n)
+    st = RNG.integers(0, 10_000, (V, S))
+    state = RNG.integers(0, 3, (V, S))
+    t = jnp.full((V,), 20_000, jnp.int32)
+    sids = jnp.asarray([1, 1, 0], jnp.int32)
+    ib, sb = ops.segment_select_batch(
+        *map(jnp.asarray, (n, nv, st, state)), t, selector_ids=sids)
+    for v in range(V):
+        i1, s1 = ops.segment_select(
+            *map(jnp.asarray, (n[v], nv[v], st[v], state[v])), t[v],
+            selector_id=sids[v])
+        assert int(ib[v]) == int(i1)
+        np.testing.assert_array_equal(np.asarray(sb[v]), np.asarray(s1))
+
+
 @pytest.mark.slow
 def test_segsel_int32_index_edge():
     """Indices above 2^24 must carry exactly (PR 1: a float32 argmax carry
@@ -136,6 +181,29 @@ def test_classify_traced_scheme_id(scheme_id):
         assert int(np.asarray(o1).max()) == 0
     elif scheme_id == 1:
         np.testing.assert_array_equal(np.asarray(o1), gc)
+
+
+@pytest.mark.parametrize("scheme_id", _elementwise_ids())
+def test_classify_pruned_chain_matches_full(scheme_id):
+    """A select chain pruned to one scheme (the grouped-dispatch kernel)
+    classifies identically to the full chain for that scheme's id, and
+    collapses to class 0 for ids outside the group."""
+    B = 300
+    v = RNG.integers(0, 10_000, B)
+    g = RNG.integers(0, 100_000, B)
+    c1 = RNG.integers(0, 2, B)
+    gc = RNG.integers(0, 2, B)
+    args = tuple(map(jnp.asarray, (v, g, c1, gc)))
+    full = ops.classify(*args, jnp.float32(777.5),
+                        scheme_id=jnp.int32(scheme_id))
+    pruned = ops.classify(*args, jnp.float32(777.5),
+                          scheme_id=jnp.int32(scheme_id),
+                          scheme_ids=(scheme_id,))
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(pruned))
+    other = next(i for i in _elementwise_ids() if i != scheme_id)
+    out = ops.classify(*args, jnp.float32(777.5), scheme_id=jnp.int32(other),
+                       scheme_ids=(scheme_id,))
+    assert int(np.asarray(out).max()) == 0
 
 
 def test_classify_vmapped_per_volume_schemes():

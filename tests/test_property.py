@@ -186,6 +186,53 @@ def test_scheme_class_ids_within_declared_budget(data):
         assert (seg_cls[live] < c).all(), name
 
 
+@settings(max_examples=8, deadline=None)
+@given(st.data())
+def test_gc_tick_conserves_valid_blocks_and_skips_cold_volumes(data):
+    """For any traces and any subset of volumes forced over their GP
+    threshold: a fleet GC tick (1) conserves valid blocks — per volume, the
+    ``total_valid`` counter and the number of set ``seg_valid`` bits are
+    unchanged by GC, which moves blocks and never creates or destroys them
+    (the invariant that replaced _gc_once's self-cancelling ``total_valid``
+    update) — and (2) passes every volume at/below its threshold through
+    bit-unchanged."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.fleetshard import (encode_policies, hetero_config,
+                                       simulate_fleet_hetero)
+    from repro.core.jaxsim import _gp, fleet_gc_tick
+    lbas = data.draw(st.lists(st.integers(0, _FN - 1),
+                              min_size=_FV * _FT, max_size=_FV * _FT))
+    hot = data.draw(st.lists(st.booleans(), min_size=_FV, max_size=_FV))
+    traces = np.asarray(lbas, np.int32).reshape(_FV, _FT)
+    policy = encode_policies(_FV, schemes="sepbit", selectors="cost_benefit",
+                             gp_thresholds=0.15)
+    cfg = _fleet_cfg()
+    cfg_h = hetero_config(cfg, policy)
+    _, state = simulate_fleet_hetero(traces, cfg, policy, return_state=True)
+    state = jax.tree_util.tree_map(jnp.asarray, state)
+    forced = dict(state, p_gp=jnp.asarray(
+        [0.0 if h else 1.0 for h in hot], jnp.float32))
+    over = np.asarray(jax.vmap(_gp)(forced)) > np.asarray(forced["p_gp"])
+    ticked = fleet_gc_tick(cfg_h, forced)
+
+    valid_bits = np.asarray(state["seg_valid"]).sum(axis=(1, 2))
+    np.testing.assert_array_equal(
+        np.asarray(ticked["seg_valid"]).sum(axis=(1, 2)), valid_bits)
+    np.testing.assert_array_equal(np.asarray(ticked["total_valid"]),
+                                  np.asarray(state["total_valid"]))
+    np.testing.assert_array_equal(np.asarray(state["total_valid"]),
+                                  valid_bits)
+    for key in state:
+        if key == "p_gp":
+            continue
+        a, b = np.asarray(ticked[key]), np.asarray(forced[key])
+        for i in np.nonzero(~over)[0]:
+            np.testing.assert_array_equal(
+                a[i], b[i],
+                err_msg=f"cold volume {i}: state[{key}] changed by the tick")
+
+
 @given(st.lists(st.integers(1, 200), min_size=4, max_size=60))
 def test_logkv_tables_consistent(page_counts):
     """Whatever the traffic, page tables always point at live pages of the
