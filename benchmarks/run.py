@@ -471,7 +471,34 @@ def roofline(full=False):
              f"roofline={100*r.roofline_fraction():.1f}%")
 
 
+def analysis_bench(full=False):
+    """Wall time to trace+lint the full registry with the static contract
+    verifier (`repro.analysis`) — analyzer cost must stay visible as the
+    scheme zoo grows."""
+    from repro import analysis as ra
+    from repro.core.placement import registry
+    cfg = ra.probe_config(n_lbas=4096 if full else 256,
+                          segment_size=32 if full else 16)
+    total = 0.0
+    for sd, impl in registry.jax_schemes():
+        us, (findings, _) = _timed(
+            lambda: ra.analyze_scheme(cfg, sd.name, sd.n_classes, impl))
+        total += us
+        _row(f"analysis/scheme/{sd.name}", us, f"findings={len(findings)}")
+    us, per_kernel = _timed(ra.analyze_kernels)
+    total += us
+    n_kernel = sum(len(v) for v in per_kernel.values())
+    _row("analysis/kernels", us, f"findings={n_kernel}")
+    us, engine_findings = _timed(lambda: ra.analyze_engine(cfg))
+    total += us
+    _row("analysis/engine", us, f"findings={len(engine_findings)}")
+    _row("analysis/total", total, f"n_lbas={cfg.n_lbas}")
+    us, report = _timed(lambda: ra.analyze_registry(cfg))
+    _row("analysis/full_report", us, f"findings={report['n_findings']}")
+
+
 BENCHES = {
+    "analysis": analysis_bench,
     "exp1": exp1_selection, "exp2": exp2_segsize, "exp3": exp3_gp,
     "exp4": exp4_breakdown, "exp5": exp5_memory,
     "fig8": fig8_user_bit, "fig10": fig10_gc_bit, "fig9_11": fig9_11_trace,
@@ -486,11 +513,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="benchmark-grade sizes")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     ap.add_argument("--mode", default=None,
-                    choices=[None, "paper", "fleet", "sweep", "gcbench"],
+                    choices=[None, "paper", "fleet", "sweep", "gcbench",
+                             "analysis-bench"],
                     help="fleet = batched multi-volume replay benchmark only; "
                          "sweep = heterogeneous policy-grid sweep only; "
                          "gcbench = steady-state GC-tick engine vs the legacy "
                          "fleet path (writes BENCH_fleet_gc.json); "
+                         "analysis-bench = trace+lint wall time of the "
+                         "static contract verifier over the registry; "
                          "paper = every bench except fleet/sweep/gcbench")
     ap.add_argument("--volumes", type=int, default=None,
                     help="fleet/sweep mode: number of volumes")
@@ -522,6 +552,9 @@ def main() -> None:
     benches["gcbench"] = functools.partial(
         gcbench, n_volumes=args.volumes, kind=args.workload,
         gp_grid=gp_grid, json_path=args.json)
+    if args.mode == "analysis-bench":
+        analysis_bench(full=args.full)
+        return
     if args.mode in ("fleet", "sweep", "gcbench"):
         benches[args.mode](full=args.full)
         return

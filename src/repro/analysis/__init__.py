@@ -1,0 +1,70 @@
+"""Static contract verifier for the placement API (`python -m repro.analysis`).
+
+Traces every registered scheme's ``init_state`` / ``user_class`` /
+``gc_classes`` (plus the Pallas kernel entry points and one full engine
+tick) to jaxprs with abstract inputs sized from a
+:class:`~repro.core.jaxsim.JaxSimConfig`, then walks the jaxprs to enforce
+the guarantees ``docs/placement_api.md`` promises scheme authors:
+
+* **slice isolation** (SA101/SA102) — per-scheme read/write manifests over
+  the state pytree; writes stay inside ``sch_<name>_*``, reads stay inside
+  the slice plus the allowed shared fields;
+* **dtype/overflow** (SA201/SA202) — no integer flows through a float dtype
+  too narrow to hold it exactly; the carried state pytree maps onto itself;
+* **purity** (SA401) — no host callbacks or effectful primitives;
+* **totality** (SA301/SA302) — class outputs are int32 and provably inside
+  ``[0, n_classes)`` by interval analysis.
+
+See ``docs/static_analysis.md`` for the full finding-code reference.
+"""
+
+from .fixtures import ViolationFixture, violation_fixtures
+from .lints import (ALLOWED_SHARED_READS, CODES, Finding, analyze_engine,
+                    analyze_kernels, analyze_scheme)
+from .manifest import Manifest, state_manifest
+from .tracing import probe_config
+
+__all__ = [
+    "ALLOWED_SHARED_READS", "CODES", "Finding", "Manifest",
+    "ViolationFixture", "analyze_engine", "analyze_kernels",
+    "analyze_registry", "analyze_scheme", "probe_config",
+    "state_manifest", "violation_fixtures",
+]
+
+
+def analyze_registry(cfg=None, *, schemes=None, kernels=True, engine=True):
+    """Run every lint over the registered JAX zoo. Returns a JSON-ready
+    report dict; ``report["n_findings"] == 0`` is the contract gate."""
+    from repro.core.placement import registry
+
+    if cfg is None:
+        cfg = probe_config()
+    report = {
+        "config": {"n_lbas": cfg.n_lbas, "segment_size": cfg.segment_size},
+        "schemes": {}, "kernels": {}, "engine": {"findings": []},
+        "n_findings": 0,
+    }
+    n = 0
+    for sd, impl in registry.jax_schemes():
+        if schemes is not None and sd.name not in schemes:
+            continue
+        findings, manifests = analyze_scheme(cfg, sd.name, sd.n_classes,
+                                             impl)
+        n += len(findings)
+        report["schemes"][sd.name] = {
+            "n_classes": sd.n_classes,
+            "findings": [f.as_dict() for f in findings],
+            "manifest": {entry: m.as_dict()
+                         for entry, m in manifests.items()},
+        }
+    if kernels:
+        for label, findings in analyze_kernels().items():
+            n += len(findings)
+            report["kernels"][label] = {
+                "findings": [f.as_dict() for f in findings]}
+    if engine:
+        findings = analyze_engine(cfg)
+        n += len(findings)
+        report["engine"]["findings"] = [f.as_dict() for f in findings]
+    report["n_findings"] = n
+    return report

@@ -1,0 +1,101 @@
+"""CLI for the placement-contract verifier (`python -m repro.analysis`).
+
+Exit codes: 0 = clean, 1 = findings, 2 = ``--selftest`` failed (a seeded
+violation fixture was not flagged with its expected code set).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import analyze_registry, analyze_scheme, probe_config
+from .fixtures import violation_fixtures
+
+
+def _print_human(report, out=sys.stdout):
+    p = print
+    for name, entry in report["schemes"].items():
+        status = "OK" if not entry["findings"] else "FINDINGS"
+        p(f"scheme {name:<8} ({entry['n_classes']} classes): {status}",
+          file=out)
+        for label, m in entry["manifest"].items():
+            reads = ", ".join(m["reads"]) or "-"
+            writes = ", ".join(m["writes"]) or "-"
+            p(f"  {label:<12} reads: {reads}", file=out)
+            p(f"  {'':<12} writes: {writes}", file=out)
+        for f in entry["findings"]:
+            p(f"  !! {f['code']} [{f['where']}] {f['message']}", file=out)
+    for label, entry in report["kernels"].items():
+        status = "OK" if not entry["findings"] else "FINDINGS"
+        p(f"kernel {label}: {status}", file=out)
+        for f in entry["findings"]:
+            p(f"  !! {f['code']} [{f['where']}] {f['message']}", file=out)
+    eng = report["engine"]["findings"]
+    p(f"engine jaxsim._user_step: {'OK' if not eng else 'FINDINGS'}",
+      file=out)
+    for f in eng:
+        p(f"  !! {f['code']} [{f['where']}] {f['message']}", file=out)
+    p(f"total findings: {report['n_findings']}", file=out)
+
+
+def _selftest(cfg, out=sys.stdout) -> int:
+    """Analyze every seeded violation fixture; each must emit exactly its
+    expected finding-code set (the analyzer proving it still catches every
+    class of contract bug)."""
+    failures = 0
+    for fx in violation_fixtures():
+        findings, _ = analyze_scheme(cfg, fx.name, fx.n_classes, fx.impl)
+        got = frozenset(f.code for f in findings)
+        ok = got == fx.expect
+        failures += not ok
+        status = "ok" if ok else "FAIL"
+        print(f"fixture {fx.name:<8} ({fx.clause}): {status} "
+              f"expected {sorted(fx.expect)} got {sorted(got)}", file=out)
+        if not ok:
+            for f in findings:
+                print(f"    {f}", file=out)
+    print(f"selftest: {6 - failures}/6 fixtures flagged as expected",
+          file=out)
+    return 2 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Statically verify the placement-API contracts over "
+                    "the registered scheme zoo, kernels, and tick engine.")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the JSON report to PATH ('-' for stdout)")
+    ap.add_argument("--schemes", default=None,
+                    help="comma-separated subset of schemes to analyze")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="skip the kernel entry points")
+    ap.add_argument("--no-engine", action="store_true",
+                    help="skip the engine tick trace")
+    ap.add_argument("--n-lbas", type=int, default=256)
+    ap.add_argument("--segment-size", type=int, default=16)
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify the seeded violation fixtures are caught "
+                         "instead of analyzing the registry")
+    args = ap.parse_args(argv)
+
+    cfg = probe_config(n_lbas=args.n_lbas, segment_size=args.segment_size)
+    if args.selftest:
+        return _selftest(cfg)
+
+    schemes = args.schemes.split(",") if args.schemes else None
+    report = analyze_registry(cfg, schemes=schemes,
+                              kernels=not args.no_kernels,
+                              engine=not args.no_engine)
+    if args.json == "-":
+        json.dump(report, sys.stdout, indent=2)
+        print()
+    elif args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2)
+        print(f"wrote {args.json} ({report['n_findings']} findings)")
+    else:
+        _print_human(report)
+    return 1 if report["n_findings"] else 0

@@ -1,0 +1,125 @@
+"""Seeded violation fixtures: deliberately broken toy schemes, one per
+contract clause, proving the analyzer catches each class of bug.
+
+None of these is registered (the registry freezes at jaxsim import and its
+structural `validate()` would reject some of them anyway); they are analyzed
+standalone via :func:`~.lints.analyze_scheme`, which merges each fixture's
+declared slice into the engine's state spec. Tests and the CLI's
+``--selftest`` assert the *exact* finding-code set per fixture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.placement.registry import JaxPlacement
+
+
+@dataclasses.dataclass(frozen=True)
+class ViolationFixture:
+    name: str                 # analyzer scheme name (slice sch_<name>_*)
+    clause: str               # the placement-API guarantee it breaks
+    expect: frozenset         # exact finding-code set the analyzer must emit
+    n_classes: int
+    impl: JaxPlacement
+
+
+def _clean_gc(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
+    return jnp.zeros(g.shape, jnp.int32), st
+
+
+def _cross_slice_write() -> ViolationFixture:
+    """Scribbles on dac's region table from another scheme's branch."""
+
+    def user_class(cfg, st, lba, v, nxt):
+        # zeros_like only consumes shape/dtype, so this is a pure write
+        return jnp.zeros((), jnp.int32), dict(
+            st, sch_dac_region=jnp.zeros_like(st["sch_dac_region"]))
+
+    return ViolationFixture(
+        "vxwrite", "no cross-slice writes", frozenset({"SA101"}), 2,
+        JaxPlacement(lambda cfg: {}, user_class, _clean_gc))
+
+
+def _foreign_read() -> ViolationFixture:
+    """Keys its class on engine segment metadata (not an allowed shared
+    field)."""
+
+    def user_class(cfg, st, lba, v, nxt):
+        return (st["seg_nvalid"][0] > 0).astype(jnp.int32), st
+
+    return ViolationFixture(
+        "vxread", "no forbidden shared-field reads", frozenset({"SA102"}), 2,
+        JaxPlacement(lambda cfg: {}, user_class, _clean_gc))
+
+
+def _float_carry() -> ViolationFixture:
+    """Round-trips the (unbounded) write clock through float32 — the exact
+    2**24 index-rounding bug class PR 1 fixed in segsel."""
+
+    def user_class(cfg, st, lba, v, nxt):
+        t_f = st["t"].astype(jnp.float32)
+        idx = t_f.astype(jnp.int32)
+        return jnp.clip(idx % 2, 0, 1), st
+
+    return ViolationFixture(
+        "vxcarry", "no integer values through narrow floats",
+        frozenset({"SA201"}), 2,
+        JaxPlacement(lambda cfg: {}, user_class, _clean_gc))
+
+
+def _dtype_drift() -> ViolationFixture:
+    """Accumulates a float into its own int32 state leaf — the update
+    promotes the leaf's dtype across the tick boundary."""
+
+    def init_state(cfg):
+        return {"sch_vxdrift_acc": jnp.zeros((), jnp.int32)}
+
+    def user_class(cfg, st, lba, v, nxt):
+        return jnp.zeros((), jnp.int32), dict(
+            st, sch_vxdrift_acc=st["sch_vxdrift_acc"] + 0.5)
+
+    return ViolationFixture(
+        "vxdrift", "state dtypes are stable across ticks",
+        frozenset({"SA202"}), 2,
+        JaxPlacement(init_state, user_class, _clean_gc))
+
+
+def _unclamped() -> ViolationFixture:
+    """Returns a raw per-LBA counter as the class id (user side) and a
+    float class vector (GC side): nothing bounds either to the budget."""
+
+    def init_state(cfg):
+        return {"sch_vxclamp_count": jnp.zeros(cfg.n_lbas, jnp.int32)}
+
+    def user_class(cfg, st, lba, v, nxt):
+        return st["sch_vxclamp_count"][lba], st
+
+    def gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
+        return g.astype(jnp.float32), st
+
+    return ViolationFixture(
+        "vxclamp", "class ids are int32 and provably in [0, n_classes)",
+        frozenset({"SA301", "SA302"}), 2,
+        JaxPlacement(init_state, user_class, gc_classes))
+
+
+def _host_callback() -> ViolationFixture:
+    """Calls back to the host from a scheme body."""
+
+    def user_class(cfg, st, lba, v, nxt):
+        jax.debug.print("classifying lba {}", lba)
+        return jnp.zeros((), jnp.int32), st
+
+    return ViolationFixture(
+        "vxpure", "scheme bodies are pure (no host callbacks)",
+        frozenset({"SA401"}), 2,
+        JaxPlacement(lambda cfg: {}, user_class, _clean_gc))
+
+
+def violation_fixtures() -> tuple[ViolationFixture, ...]:
+    return (_cross_slice_write(), _foreign_read(), _float_carry(),
+            _dtype_drift(), _unclamped(), _host_callback())

@@ -1,0 +1,222 @@
+"""The contract lints and the per-target analysis drivers.
+
+Finding codes (see ``docs/static_analysis.md``):
+
+=====  ========================================================
+SA101  write (or init key) outside the scheme's own state slice
+SA102  read of a forbidden shared / foreign state field
+SA201  integer value carried through a float dtype too narrow
+       to represent it exactly (the 2**24 float32 index bug)
+SA202  state leaf changes dtype/shape/weak-type across a tick
+SA301  class output not provably inside [0, n_classes)
+SA302  class output dtype is not int32
+SA401  host callback / effectful primitive in a traced body
+=====  ========================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.placement import registry
+
+from . import tracing
+from .intervals import FLOAT_EXACT_INT, IntervalAnalysis
+from .manifest import state_manifest
+from .walker import impurity_of
+
+CODES = {
+    "SA101": "cross-slice state write",
+    "SA102": "forbidden shared-field read",
+    "SA201": "float index carry",
+    "SA202": "state dtype/shape drift across tick",
+    "SA301": "class id not provably in [0, n_classes)",
+    "SA302": "class output dtype is not int32",
+    "SA401": "effectful primitive / host callback",
+}
+
+# Shared engine fields a scheme may read (never write): the clock, the ℓ
+# estimate, and the per-LBA location/last-write tables the paper's schemes
+# key their decisions on. Everything else — segment metadata, counters,
+# policy scalars, other schemes' sch_* slices — is off limits.
+ALLOWED_SHARED_READS = frozenset({"t", "ell", "loc_seg", "loc_off",
+                                  "last_uw"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str
+    where: str              # entry point, e.g. "dac.user_class"
+    message: str
+
+    def __str__(self):
+        return f"{self.code} [{self.where}] {self.message}"
+
+    def as_dict(self):
+        return {"code": self.code, "kind": CODES[self.code],
+                "where": self.where, "message": self.message}
+
+
+def _dedup(findings):
+    return list(dict.fromkeys(findings))
+
+
+# -- individual lints ----------------------------------------------------------
+
+def lint_slice_isolation(rec, prefix):
+    """SA101/SA102 from the read/write manifest."""
+    m = state_manifest(rec)
+    out = []
+    for key in m.writes:
+        if not key.startswith(prefix):
+            out.append(Finding(
+                "SA101", rec.label,
+                f"writes state key {key!r} outside its own slice "
+                f"(allowed prefix {prefix!r})"))
+    for key in m.reads:
+        if key.startswith(prefix) or key in ALLOWED_SHARED_READS:
+            continue
+        what = ("another scheme's slice" if key.startswith("sch_")
+                else "a forbidden shared field")
+        out.append(Finding("SA102", rec.label,
+                           f"reads {what}: {key!r}"))
+    return out, m
+
+
+def lint_drift(rec):
+    """SA202: the carried state pytree must map exactly onto itself."""
+    out = []
+    for key, i in rec.state_in.items():
+        j = rec.state_out.get(key)
+        if j is None:
+            out.append(Finding("SA202", rec.label,
+                               f"state key {key!r} dropped from the "
+                               "carried pytree"))
+            continue
+        a = rec.jaxpr.invars[i].aval
+        b = rec.jaxpr.outvars[j].aval
+        diffs = []
+        if a.dtype != b.dtype:
+            diffs.append(f"dtype {a.dtype} -> {b.dtype}")
+        if a.shape != b.shape:
+            diffs.append(f"shape {a.shape} -> {b.shape}")
+        if bool(getattr(a, "weak_type", False)) != bool(
+                getattr(b, "weak_type", False)):
+            diffs.append("weak-type flag flips")
+        if diffs:
+            out.append(Finding(
+                "SA202", rec.label,
+                f"state key {key!r} changes across the tick boundary: "
+                + "; ".join(diffs)))
+    for key in rec.state_out:
+        if key not in rec.state_in:
+            out.append(Finding("SA202", rec.label,
+                               f"state key {key!r} appears only on the "
+                               "output side of the tick"))
+    return out
+
+
+def run_interval_lints(rec):
+    """One interval pass collecting SA201/SA401; returns (findings,
+    out_intervals aligned with the jaxpr's outvars)."""
+    found = []
+
+    def visit(eqn, ins):
+        reason = impurity_of(eqn)
+        if reason is not None:
+            found.append(Finding("SA401", rec.label,
+                                 f"impure operation: {reason}"))
+        if eqn.primitive.name != "convert_element_type":
+            return
+        new = eqn.params.get("new_dtype")
+        src = getattr(eqn.invars[0].aval, "dtype", None)
+        if new is None or src is None:
+            return
+        if not (jnp.issubdtype(new, jnp.integer)
+                and jnp.issubdtype(src, jnp.floating)):
+            return
+        try:
+            src_name = np.dtype(src).name
+        except TypeError:
+            src_name = str(src)
+        limit = FLOAT_EXACT_INT.get(src_name, 2.0 ** 24)
+        lo, hi = ins[0]
+        if lo < -limit or hi > limit:
+            span = ("unbounded" if not (math.isfinite(lo)
+                                        and math.isfinite(hi))
+                    else f"[{lo:g}, {hi:g}]")
+            found.append(Finding(
+                "SA201", rec.label,
+                f"integer value cast {src} -> {np.dtype(new).name} with "
+                f"range {span}, beyond the exact-integer window "
+                f"±{limit:g} of {src}"))
+
+    out_ivs = IntervalAnalysis(visitor=visit).run(rec.closed_jaxpr,
+                                                  rec.seeds)
+    return found, out_ivs
+
+
+def lint_totality(rec, out_intervals, n_classes):
+    """SA301/SA302 on the class output slot."""
+    out = []
+    slot = rec.class_out
+    if slot is None:
+        return out
+    aval = rec.jaxpr.outvars[slot].aval
+    if np.dtype(aval.dtype) != np.int32:
+        out.append(Finding("SA302", rec.label,
+                           f"class output dtype is {aval.dtype}, "
+                           "expected int32"))
+    lo, hi = out_intervals[slot]
+    if not (lo >= 0 and hi <= n_classes - 1):
+        span = ("unbounded" if not (math.isfinite(lo) and math.isfinite(hi))
+                else f"[{lo:g}, {hi:g}]")
+        out.append(Finding(
+            "SA301", rec.label,
+            f"class output interval is {span}, not provably inside "
+            f"[0, {n_classes})"))
+    return out
+
+
+# -- per-target drivers --------------------------------------------------------
+
+def analyze_scheme(cfg, name, n_classes, impl):
+    """All lints for one JaxPlacement triple (registered or fixture).
+    Returns (findings, {entry: Manifest})."""
+    findings, manifests = [], {}
+    try:
+        registry.check_jax_state_slice(name, impl, cfg)
+    except AssertionError as exc:
+        findings.append(Finding("SA101", f"{name}.init_state", str(exc)))
+    prefix = registry.slice_prefix(name)
+    for rec in tracing.scheme_traces(cfg, name, impl):
+        iso, m = lint_slice_isolation(rec, prefix)
+        manifests[rec.label.split(".", 1)[1]] = m
+        findings += iso
+        findings += lint_drift(rec)
+        interval_findings, out_ivs = run_interval_lints(rec)
+        findings += interval_findings
+        findings += lint_totality(rec, out_ivs, n_classes)
+    return _dedup(findings), manifests
+
+
+def analyze_engine(cfg):
+    """Drift + overflow + purity over one full engine user step."""
+    rec = tracing.engine_trace(cfg)
+    findings = lint_drift(rec)
+    interval_findings, _ = run_interval_lints(rec)
+    return _dedup(findings + interval_findings)
+
+
+def analyze_kernels():
+    """Overflow + purity over the kernel entry points; returns
+    {label: findings}."""
+    out = {}
+    for rec in tracing.kernel_traces():
+        findings, _ = run_interval_lints(rec)
+        out[rec.label] = _dedup(findings)
+    return out

@@ -257,6 +257,19 @@ def init_state(cfg: JaxSimConfig, policy: dict | None = None) -> dict:
     return state
 
 
+def state_spec(cfg: JaxSimConfig, policy: dict | None = None) -> dict:
+    """Canonical shape/dtype spec of the carried state pytree, as a dict of
+    ``jax.ShapeDtypeStruct`` — computed abstractly (no device allocation).
+
+    This is the single source of truth for what the tick engine carries:
+    the static analyzer (`repro.analysis`) seeds scheme traces from it, and
+    its dtype-drift lint (SA202) checks that one user step maps this spec
+    exactly onto itself — a leaf whose dtype, shape, or weak-type flag
+    changes across a tick boundary would silently re-trace/recompile (or
+    truncate) inside ``lax.scan``."""
+    return jax.eval_shape(lambda: init_state(cfg, policy))
+
+
 # -- placement rules (lax.switch over the registry's branch stack) ------------
 
 def _user_class_dispatch(cfg: JaxSimConfig, st, lba, v, nxt):

@@ -130,13 +130,13 @@ def _dac() -> JaxPlacement:
         return {"sch_dac_region": jnp.zeros(cfg.n_lbas, jnp.int32)}
 
     def user_class(cfg, st, lba, v, nxt):
-        r = jnp.minimum(st["sch_dac_region"][lba] + 1, nc - 1)
+        r = jnp.clip(st["sch_dac_region"][lba] + 1, 1, nc - 1)
         region = st["sch_dac_region"].at[lba].set(r)
         return _i32(nc - 1 - r), dict(st, sch_dac_region=region)
 
     def gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
         region = st["sch_dac_region"]
-        r = jnp.maximum(region[lba_v] - 1, 0)
+        r = jnp.clip(region[lba_v] - 1, 0, nc - 1)
         idx = jnp.where(valid_v, lba_v, cfg.n_lbas)    # dead slots: dropped
         region = region.at[idx].set(r, mode="drop")
         return _i32(nc - 1 - r), dict(st, sch_dac_region=region)
@@ -151,7 +151,7 @@ def _ml() -> JaxPlacement:
 
     def _bit_level(count):
         # bit_length(count) - 1 == floor(log2) for count >= 1, exactly
-        return jnp.minimum(31 - jax.lax.clz(count), nc - 1)
+        return jnp.clip(31 - jax.lax.clz(count), 0, nc - 1)
 
     def init_state(cfg):
         return {"sch_ml_count": jnp.zeros(cfg.n_lbas, jnp.int32),
@@ -166,7 +166,7 @@ def _ml() -> JaxPlacement:
 
     def gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
         level = st["sch_ml_level"]
-        lvl = jnp.maximum(level[lba_v] - 1, 0)
+        lvl = jnp.clip(level[lba_v] - 1, 0, nc - 1)
         idx = jnp.where(valid_v, lba_v, cfg.n_lbas)
         level = level.at[idx].set(lvl, mode="drop")
         return _i32(nc - 1 - lvl), dict(st, sch_ml_level=level)
@@ -184,7 +184,8 @@ def _sfs() -> JaxPlacement:
         return count.astype(jnp.float32) / age
 
     def _classify(st, h):
-        cls = nc - 1 - jnp.searchsorted(st["sch_sfs_bounds"], h)
+        cls = jnp.clip(nc - 1 - jnp.searchsorted(st["sch_sfs_bounds"], h),
+                       0, nc - 1)
         return jnp.where(st["sch_sfs_ready"], cls, 0)
 
     def init_state(cfg):

@@ -201,11 +201,47 @@ def jax_scheme_id(name: str) -> int:
             f"JAX schemes: {tuple(_JAX_ORDER)}") from None
 
 
+def slice_prefix(name: str) -> str:
+    """State-pytree key prefix reserved for a scheme's private slice."""
+    return f"sch_{name}_"
+
+
+def jax_state_slice(name: str, cfg=None) -> tuple[str, ...]:
+    """Keys a scheme's ``init_state`` declares, probed with a tiny config.
+
+    This is the scheme's *declared* slice; the static analyzer
+    (`repro.analysis`) verifies behaviorally that ``user_class`` /
+    ``gc_classes`` write nothing outside it."""
+    _ensure_jax_loaded()
+    if name not in _JAX_IMPLS:
+        raise ValueError(f"scheme {name!r} has no JAX implementation")
+    if cfg is None:
+        import types
+        cfg = types.SimpleNamespace(n_lbas=8, segment_size=4)
+    return tuple(_JAX_IMPLS[name].init_state(cfg))
+
+
+def check_jax_state_slice(name: str, impl: JaxPlacement, cfg=None) -> None:
+    """Structural pre-check: every state key ``init_state`` declares must
+    carry the scheme's own ``sch_<name>_`` prefix (the jaxpr analyzer then
+    verifies the behavioral half — no writes land outside the slice)."""
+    if cfg is None:
+        import types
+        cfg = types.SimpleNamespace(n_lbas=8, segment_size=4)
+    prefix = slice_prefix(name)
+    bad = [k for k in impl.init_state(cfg) if not str(k).startswith(prefix)]
+    if bad:
+        raise AssertionError(
+            f"{name}: init_state declares key(s) outside its own state "
+            f"slice {sorted(bad)} (keys must start with {prefix!r})")
+
+
 def validate() -> None:
     """Registry-completeness check (run in CI): every scheme declares a
     positive class budget, a numpy implementation whose class attributes
     agree with the registry entry, and either a JAX triple or an explicit
-    ``numpy_only`` marker. JAX ids must be dense with the historical 0/1/2
+    ``numpy_only`` marker. JAX triples may only declare ``sch_<name>_*``
+    state keys. JAX ids must be dense with the historical 0/1/2
     anchor (the Pallas kernels encode scheme ids as runtime scalars)."""
     _ensure_jax_loaded()
     if not _REGISTRY:
@@ -221,6 +257,8 @@ def validate() -> None:
         if sd.numpy_only == (name in _JAX_IMPLS):
             raise AssertionError(
                 f"{name}: needs exactly one of a JAX triple or numpy_only")
+        if name in _JAX_IMPLS:
+            check_jax_state_slice(name, _JAX_IMPLS[name])
     for anchor, want in (("nosep", 0), ("sepgc", 1), ("sepbit", 2)):
         if _JAX_ORDER[want] != anchor:
             raise AssertionError(f"JAX id {want} must stay {anchor!r} "

@@ -82,3 +82,18 @@ def classify(v: jax.Array, g: jax.Array, from_c1: jax.Array, is_gc: jax.Array,
     )(ell.reshape(1, 1).astype(jnp.float32),
       jnp.asarray(scheme_id, jnp.int32).reshape(1, 1), v2, g2, c12, gc2)
     return out.reshape(-1)[:B]
+
+
+def analysis_entries(batch: int = 2048):
+    """Traceable entry points for the static analyzer (`repro.analysis`):
+    label -> (fn, abstract args). The analyzer runs its overflow/purity
+    lints over the traced kernel body, Pallas inner jaxpr included."""
+    vec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    scalar_f = jax.ShapeDtypeStruct((), jnp.float32)
+    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+    return {
+        "kernels.classify": (
+            lambda v, g, c1, gc, ell, sid: classify(v, g, c1, gc, ell,
+                                                    scheme_id=sid),
+            (vec, vec, vec, vec, scalar_f, scalar_i)),
+    }

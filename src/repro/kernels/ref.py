@@ -50,6 +50,26 @@ def classify_ref(v, g, from_c1, is_gc, ell, *, scheme_id=None):
     return out
 
 
+def analysis_entries(batch: int = 2048, n_segments: int = 1024):
+    """Traceable entry points for the static analyzer (`repro.analysis`) —
+    the jnp oracles are linted with the same rules as the Pallas kernels,
+    so an overflow bug cannot hide in the reference either."""
+    vec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    seg = jax.ShapeDtypeStruct((n_segments,), jnp.int32)
+    scalar_f = jax.ShapeDtypeStruct((), jnp.float32)
+    scalar_i = jax.ShapeDtypeStruct((), jnp.int32)
+    return {
+        "kernels.classify_ref": (
+            lambda v, g, c1, gc, ell, sid: classify_ref(v, g, c1, gc, ell,
+                                                        scheme_id=sid),
+            (vec, vec, vec, vec, scalar_f, scalar_i)),
+        "kernels.segment_select_ref": (
+            lambda n, nv, st, state, t, sel: segment_select_ref(
+                n, nv, st, state, t, selector_id=sel),
+            (seg, seg, seg, seg, scalar_i, scalar_i)),
+    }
+
+
 def zipf_bit_sums_ref(probs, u0, v0, g0, r0):
     p = probs.astype(jnp.float32)
     lg = jnp.log1p(-p)

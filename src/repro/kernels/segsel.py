@@ -186,3 +186,23 @@ def segment_select_batch(seg_n: jax.Array, seg_nvalid: jax.Array,
     score = out_score[:, 0]
     idx = out_idx[:, 0]
     return jnp.where(jnp.isfinite(score), idx, -1), score
+
+
+def analysis_entries(n_segments: int = 1024, n_volumes: int = 4):
+    """Traceable entry points for the static analyzer (`repro.analysis`).
+    The int32 argmax carry inside ``_fold_tile_argmax`` is exactly what its
+    float-index-carry lint (SA201) guards."""
+    seg = jax.ShapeDtypeStruct((n_segments,), jnp.int32)
+    fleet = jax.ShapeDtypeStruct((n_volumes, n_segments), jnp.int32)
+    per_vol = jax.ShapeDtypeStruct((n_volumes,), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    return {
+        "kernels.segment_select": (
+            lambda n, nv, st, state, t, sel: segment_select(
+                n, nv, st, state, t, selector_id=sel),
+            (seg, seg, seg, seg, scalar, scalar)),
+        "kernels.segment_select_batch": (
+            lambda n, nv, st, state, t, sels: segment_select_batch(
+                n, nv, st, state, t, selector_ids=sels),
+            (fleet, fleet, fleet, fleet, per_vol, per_vol)),
+    }

@@ -2,12 +2,25 @@
 
 Skipped wholesale (not failed) when ``hypothesis`` is absent — the seed
 container does not ship it; ``requirements-dev.txt`` installs it for CI.
+The CI full lane exports ``REPRO_REQUIRE_HYPOTHESIS=1``, which turns the
+skip into a hard failure: the fleet invariants must never silently stop
+running where hypothesis is supposed to be installed.
 """
+
+import os
 
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+        raise ImportError(
+            "hypothesis is not installed but REPRO_REQUIRE_HYPOTHESIS is "
+            "set — the property suite must not be skipped in this "
+            "environment (check requirements-dev.txt installation)")
+    pytest.skip("hypothesis not installed", allow_module_level=True)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.blockstore import INF, Volume

@@ -98,6 +98,34 @@ def test_class_budgets_respected_under_padding():
         assert (seg_cls[live] < c).all(), name
 
 
+def test_state_slice_prefix_enforced():
+    """A JaxPlacement whose init_state declares a key outside its own
+    sch_<name>_ slice is rejected by the structural pre-check (validate()
+    runs it for every registered scheme; the jaxpr analyzer verifies the
+    behavioral half)."""
+    import jax.numpy as jnp
+    from repro.core.placement.registry import (JaxPlacement,
+                                               check_jax_state_slice,
+                                               jax_state_slice,
+                                               slice_prefix)
+
+    def ok_init(cfg):
+        return {"sch_toy_table": jnp.zeros(cfg.n_lbas, jnp.int32)}
+
+    def bad_init(cfg):
+        return {"sch_toy_table": jnp.zeros(cfg.n_lbas, jnp.int32),
+                "seg_nvalid": jnp.zeros(cfg.n_lbas, jnp.int32)}
+
+    noop = lambda *a: None  # noqa: E731  (never traced by the check)
+    check_jax_state_slice("toy", JaxPlacement(ok_init, noop, noop))
+    with pytest.raises(AssertionError, match="seg_nvalid"):
+        check_jax_state_slice("toy", JaxPlacement(bad_init, noop, noop))
+    assert slice_prefix("toy") == "sch_toy_"
+    assert jax_state_slice("dac") == ("sch_dac_region",)
+    with pytest.raises(ValueError, match="no JAX implementation"):
+        jax_state_slice("warcip")
+
+
 def test_registry_frozen_after_engine_import():
     """Registering a JAX-bound scheme after jaxsim materialized the dense id
     table must fail loudly — a silently missing lax.switch branch would
