@@ -7,7 +7,8 @@ fleet in one compiled program. This module supplies the three pieces on top
 of `jaxsim.fleet_body`:
 
 1. **Policy encoding** — `FleetPolicy` holds the per-volume traced knobs
-   (scheme id, selector id, GP threshold, nc window) as (V,) numpy arrays;
+   (scheme id, selector id, GP threshold, nc window, GC scheduling policy)
+   as (V,) numpy arrays;
    `policy_grid` lays a (scheme × selector × gp) grid over a fleet,
    cell-major, so `tracegen.tiled_fleet` can replay identical workloads
    under every cell for a fair comparison.
@@ -41,9 +42,10 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .jaxsim import (JaxSimConfig, SCHEME_CLASSES, SCHEME_IDS, SCHEME_NAMES,
-                     SELECTOR_IDS, SELECTOR_NAMES, _run_fleet, coerce_fleet,
-                     coerce_fleet_annotations, fleet_annotations, fleet_body,
+from .jaxsim import (GCSCHED_IDS, GCSCHED_NAMES, JaxSimConfig, SCHEME_CLASSES,
+                     SCHEME_IDS, SCHEME_NAMES, SELECTOR_IDS, SELECTOR_NAMES,
+                     _run_fleet, coerce_fleet, coerce_fleet_annotations,
+                     fleet_annotations, fleet_body, hist_quantile,
                      summarize_fleet)
 
 
@@ -54,8 +56,13 @@ class FleetPolicy:
     selector_id: np.ndarray    # int32, jaxsim.SELECTOR_IDS
     gp_threshold: np.ndarray   # float32
     nc_window: np.ndarray      # int32
+    gcsched_id: np.ndarray | None = None
+    #                          # int32, jaxsim.GCSCHED_IDS (None = all greedy)
 
     def __post_init__(self):
+        if self.gcsched_id is None:
+            object.__setattr__(self, "gcsched_id",
+                               np.zeros_like(self.scheme_id))
         v = len(self.scheme_id)
         for f in dataclasses.fields(self):
             if len(getattr(self, f.name)) != v:
@@ -82,6 +89,7 @@ class FleetPolicy:
             "p_gp": jnp.asarray(self.gp_threshold, jnp.float32),
             "p_ncw": jnp.asarray(self.nc_window, jnp.int32),
             "p_classes": jnp.asarray(self.n_classes, jnp.int32),
+            "p_gcsched": jnp.asarray(self.gcsched_id, jnp.int32),
         }
 
     def volume(self, i: int) -> dict:
@@ -92,6 +100,9 @@ class FleetPolicy:
         return (SCHEME_NAMES[int(self.scheme_id[i])],
                 SELECTOR_NAMES[int(self.selector_id[i])],
                 float(self.gp_threshold[i]))
+
+    def gcsched(self, i: int) -> str:
+        return GCSCHED_NAMES[int(self.gcsched_id[i])]
 
 
 def _coerce(values, v, ids=None, dtype=np.int32):
@@ -108,26 +119,31 @@ def _coerce(values, v, ids=None, dtype=np.int32):
 
 def encode_policies(n_volumes: int, *, schemes="sepbit",
                     selectors="cost_benefit", gp_thresholds=0.15,
-                    nc_windows=16) -> FleetPolicy:
+                    nc_windows=16, gcscheds="greedy") -> FleetPolicy:
     """Build a FleetPolicy from names/scalars (broadcast) or sequences."""
     return FleetPolicy(
         scheme_id=_coerce(schemes, n_volumes, SCHEME_IDS),
         selector_id=_coerce(selectors, n_volumes, SELECTOR_IDS),
         gp_threshold=_coerce(gp_thresholds, n_volumes, dtype=np.float32),
         nc_window=_coerce(nc_windows, n_volumes),
+        gcsched_id=_coerce(gcscheds, n_volumes, GCSCHED_IDS),
     )
 
 
 def policy_grid(schemes, selectors, gp_thresholds, *, volumes_per_cell: int = 1,
-                nc_window: int = 16) -> tuple[FleetPolicy, list[tuple]]:
+                nc_window: int = 16,
+                gcsched: str = "greedy") -> tuple[FleetPolicy, list[tuple]]:
     """Cartesian (scheme × selector × gp) grid, ``volumes_per_cell`` volumes
     per cell, laid out cell-major (cell 0's volumes first). Returns the
-    policy plus the cell list ``[(scheme, selector, gp), ...]`` in order."""
+    policy plus the cell list ``[(scheme, selector, gp), ...]`` in order.
+    ``gcsched`` applies fleet-wide (the latbench mode sweeps scheduling ×
+    scheme via `encode_policies` directly)."""
     cells = list(itertools.product(schemes, selectors, gp_thresholds))
     v = len(cells) * volumes_per_cell
     sch, sel, gp = zip(*(c for c in cells for _ in range(volumes_per_cell)))
     return encode_policies(v, schemes=list(sch), selectors=list(sel),
-                           gp_thresholds=list(gp), nc_windows=nc_window), cells
+                           gp_thresholds=list(gp), nc_windows=nc_window,
+                           gcscheds=gcsched), cells
 
 
 def hetero_config(cfg: JaxSimConfig, policy: FleetPolicy) -> JaxSimConfig:
@@ -163,7 +179,7 @@ def matching_single_config(cfg: JaxSimConfig, policy: FleetPolicy,
     return dataclasses.replace(
         cfg, scheme=scheme, selector=selector, gp_threshold=gp,
         nc_window=int(policy.nc_window[i]), n_segments=fleet_cfg.s_max,
-        class_slots=None)
+        gc_sched=policy.gcsched(i), class_slots=None)
 
 
 # -- device sharding ----------------------------------------------------------
@@ -236,7 +252,8 @@ def _policy_rows(policy: FleetPolicy, idx: np.ndarray) -> FleetPolicy:
     return FleetPolicy(scheme_id=policy.scheme_id[idx],
                        selector_id=policy.selector_id[idx],
                        gp_threshold=policy.gp_threshold[idx],
-                       nc_window=policy.nc_window[idx])
+                       nc_window=policy.nc_window[idx],
+                       gcsched_id=policy.gcsched_id[idx])
 
 
 def simulate_fleet_hetero(traces, cfg: JaxSimConfig, policy: FleetPolicy, *,
@@ -264,6 +281,9 @@ def simulate_fleet_hetero(traces, cfg: JaxSimConfig, policy: FleetPolicy, *,
     if policy.n_volumes != V:
         raise ValueError(f"policy covers {policy.n_volumes} volumes, "
                          f"traces cover {V}")
+    if cfg.gc_engine == "legacy" and np.any(policy.gcsched_id != 0):
+        raise ValueError("GC scheduling policies require the tick engine; "
+                         "the legacy engine is the greedy parity oracle")
     cfg_h = hetero_config(cfg, policy)
     if mesh is None and shard:
         mesh = fleet_mesh()
@@ -314,7 +334,8 @@ def sweep_summary(res: dict, policy: FleetPolicy,
 
     Returns one row per (scheme, selector, gp) with user/GC write totals and
     the cell's overall WA, in grid order when ``cells`` is given (else in
-    order of first appearance)."""
+    order of first appearance). Timing-model runs additionally get per-cell
+    latency columns (p50/p99 from the cell's merged histogram)."""
     groups: dict[tuple, dict] = {}
     order = []
     for i, vol in enumerate(res["volumes"]):
@@ -323,14 +344,26 @@ def sweep_summary(res: dict, policy: FleetPolicy,
             groups[key] = {"scheme": key[0], "selector": key[1],
                            "gp_threshold": key[2], "n_volumes": 0,
                            "user_writes": 0, "gc_writes": 0,
-                           "free_exhausted": 0, "per_volume_wa": []}
+                           "overflow": 0, "free_exhausted": 0,
+                           "per_volume_wa": []}
             order.append(key)
         g = groups[key]
         g["n_volumes"] += 1
         g["user_writes"] += vol["user_writes"]
         g["gc_writes"] += vol["gc_writes"]
-        g["free_exhausted"] += vol["free_exhausted"]
+        g["overflow"] += vol["overflow"]
+        g["free_exhausted"] += vol["overflow"]
         g["per_volume_wa"].append(vol["wa"])
+        if "latency" in vol:
+            lat = vol["latency"]
+            acc = g.setdefault("_lat", {
+                "hist": np.zeros(len(lat["hist"]), np.int64),
+                "max": 0.0, "total": 0.0, "gc_debt": 0.0,
+                "write_cost": lat["write_cost"]})
+            acc["hist"] += np.asarray(lat["hist"])
+            acc["max"] = max(acc["max"], lat["max"])
+            acc["total"] += lat["total"]
+            acc["gc_debt"] += lat["gc_debt"]
     if cells is not None:
         # group keys carry float32 thresholds (they round-trip the device);
         # normalize the grid's python floats the same way before matching
@@ -348,12 +381,21 @@ def sweep_summary(res: dict, policy: FleetPolicy,
         g["wa_ci95"] = (float(_t95(len(wa) - 1) * wa.std(ddof=1)
                               / np.sqrt(len(wa)))
                         if len(wa) > 1 else 0.0)
+        g["degraded"] = g["overflow"] > 0
+        acc = g.pop("_lat", None)
+        if acc is not None:
+            g["lat_p50"] = hist_quantile(acc["hist"], 0.50, acc["write_cost"])
+            g["lat_p99"] = hist_quantile(acc["hist"], 0.99, acc["write_cost"])
+            g["lat_max"] = acc["max"]
+            g["lat_mean"] = acc["total"] / max(g["user_writes"], 1)
+            g["gc_debt"] = acc["gc_debt"]
         rows.append(g)
     return rows
 
 
 def simulate_fleet_sweep(traces, cfg: JaxSimConfig, *, schemes, selectors,
                          gp_thresholds, nc_window: int = 16,
+                         gcsched: str = "greedy",
                          mesh: Mesh | None = None, shard: bool = True,
                          group: bool = True) -> dict:
     """One-call sweep: ``traces`` must hold ``cells × per_cell`` volumes laid
@@ -366,7 +408,8 @@ def simulate_fleet_sweep(traces, cfg: JaxSimConfig, *, schemes, selectors,
                          f"{len(cells)}-cell grid")
     per_cell = padded.shape[0] // len(cells)
     policy, cells = policy_grid(schemes, selectors, gp_thresholds,
-                                volumes_per_cell=per_cell, nc_window=nc_window)
+                                volumes_per_cell=per_cell, nc_window=nc_window,
+                                gcsched=gcsched)
     res = simulate_fleet_hetero(padded, cfg, policy, mesh=mesh, shard=shard,
                                 group=group)
     res["sweep"] = sweep_summary(res, policy, cells)

@@ -57,6 +57,17 @@ compiles only its own branches). The **legacy** engine keeps the pre-tick
 formulation (entry-point victim selection, per-class unrolled rewrite) as
 the benchmark baseline and a bitwise parity oracle; docs/architecture.md
 maps the whole stack.
+
+Timing/SLO model (``cfg.timing``): per-volume ``lat_*`` state slices carry a
+foreground clock, a device-busy horizon, and a fixed-bucket latency
+histogram; each user write charges ``write_cost`` plus any queueing behind
+charged GC work, and each victim rewrite books ``nvalid * gc_block_cost``
+of GC debt. *When* that debt lands on the foreground is the traced
+per-volume scheduling policy ``p_gcsched`` (greedy / rate_limited /
+idle_window — see GCSCHED_IDS and docs/gc_scheduling.md). With timing off
+the ``lat_*`` keys still exist (one pytree structure) but are carried
+through untouched, and all non-``lat_*`` state is bit-identical to a
+timing-on greedy run.
 """
 
 from __future__ import annotations
@@ -85,6 +96,25 @@ SELECTOR_IDS = {"greedy": 0, "cost_benefit": 1}
 SELECTOR_NAMES = tuple(SELECTOR_IDS)
 MAX_CLASSES = max(SCHEME_CLASSES)
 
+# GC scheduling policies (traced per-volume, like the selector ids). All
+# three run the same tick engine; they differ in *when* GC work runs and
+# when its cost lands on the foreground timeline (docs/gc_scheduling.md):
+#   greedy       — GC whenever GP exceeds p_gp; full rewrite cost charged
+#                  the same tick (today's behavior, the bit-parity baseline)
+#   rate_limited — identical GC decisions, but at most cfg.gc_rate rewritten
+#                  blocks are *charged* against the foreground per tick; the
+#                  rest accrues as lat_debt and drains in later ticks
+#   idle_window  — defer GC while recent-write density is high, with a hard
+#                  free-pool watermark override so the pool can't exhaust
+GCSCHED_IDS = {"greedy": 0, "rate_limited": 1, "idle_window": 2}
+GCSCHED_NAMES = tuple(GCSCHED_IDS)
+
+# Latency histogram: quarter-octave log2 buckets of latency/write_cost.
+# Bucket b covers [2^(b/4), 2^((b+1)/4)); quantiles report the lower edge,
+# so an uncontended trace (every latency == write_cost, bucket 0) yields
+# p50 == p99 == write_cost exactly.
+LAT_BUCKETS_PER_OCTAVE = 4
+
 
 @dataclasses.dataclass(frozen=True)
 class JaxSimConfig:
@@ -110,6 +140,22 @@ class JaxSimConfig:
     #                                       # prune the lax.switch branch stack
     #                                         to these schemes only (grouped
     #                                         dispatch; None = full registry)
+    timing: bool = False                    # latency/SLO model: charge service
+    #                                         times and report p50/p99/max
+    #                                         foreground latency alongside WA
+    write_cost: float = 1.0                 # service time per user write
+    gc_block_cost: float = 1.0              # device time per GC-rewritten block
+    gc_sched: str = "greedy"                # greedy | rate_limited | idle_window
+    gc_rate: int = 4                        # rate_limited: blocks charged/tick
+    gc_watermark: int | None = None         # idle_window: free rows below which
+    #                                         deferral is overridden (default
+    #                                         2 * n_class_slots + 2 — one GC
+    #                                         iteration can consume up to C
+    #                                         fresh rows while releasing one)
+    idle_density: float = 0.5               # idle_window: defer while the
+    #                                         write-density EWMA exceeds this
+    density_window: int = 16                # EWMA window (writes) for density
+    lat_buckets: int = 64                   # latency histogram width
 
     @property
     def n_classes(self) -> int:
@@ -129,6 +175,13 @@ class JaxSimConfig:
         cap_segments = int(np.ceil(self.n_lbas / (1.0 - self.gp_threshold)
                                    / self.segment_size))
         return 2 * cap_segments + 4 * self.n_class_slots + 8
+
+    @property
+    def watermark_rows(self) -> int:
+        """Free-row floor for idle_window's hard override."""
+        if self.gc_watermark is not None:
+            return self.gc_watermark
+        return 2 * self.n_class_slots + 2
 
     @property
     def pad_row(self) -> int:
@@ -182,12 +235,19 @@ def default_policy(cfg: JaxSimConfig) -> dict:
     if cfg.scheme_group is not None and cfg.scheme not in cfg.scheme_group:
         raise ValueError(f"scheme {cfg.scheme!r} is outside this config's "
                          f"dispatch group {cfg.scheme_group}")
+    if cfg.gc_sched not in GCSCHED_IDS:
+        raise ValueError(f"unknown gc_sched {cfg.gc_sched!r}; "
+                         f"choices: {GCSCHED_NAMES}")
+    if cfg.gc_engine == "legacy" and cfg.gc_sched != "greedy":
+        raise ValueError("GC scheduling policies require the tick engine; "
+                         "the legacy engine is the greedy parity oracle")
     return {
         "p_scheme": jnp.int32(_scheme_id_or_raise(cfg.scheme)),
         "p_selector": jnp.int32(SELECTOR_IDS[cfg.selector]),
         "p_gp": jnp.float32(cfg.gp_threshold),
         "p_ncw": jnp.int32(cfg.nc_window),
         "p_classes": jnp.int32(cfg.n_classes),
+        "p_gcsched": jnp.int32(GCSCHED_IDS[cfg.gc_sched]),
     }
 
 
@@ -236,6 +296,21 @@ def init_state(cfg: JaxSimConfig, policy: dict | None = None) -> dict:
         "nc": jnp.int32(0),
         "class_user": jnp.zeros(C, jnp.int32),
         "class_gc": jnp.zeros(C, jnp.int32),
+        # latency/SLO model (docs/gc_scheduling.md). Always present so the
+        # pytree structure (and state_spec, hence the SA202 drift gate) is
+        # independent of cfg.timing; with timing off every key below except
+        # lat_dens (the idle_window density EWMA, tracked unconditionally)
+        # is carried through bit-unchanged.
+        "lat_now": jnp.float32(0),      # foreground clock (completion time
+        #                                 of the volume's latest user write)
+        "lat_busy": jnp.float32(0),     # device-busy horizon: foreground
+        #                                 writes queue behind charged GC work
+        "lat_debt": jnp.float32(0),     # GC work done but not yet charged
+        "lat_charged": jnp.float32(0),  # cumulative charged GC time
+        "lat_dens": jnp.float32(0),     # recent-write density EWMA
+        "lat_sum": jnp.float32(0),      # sum of per-write latencies
+        "lat_max": jnp.float32(0),      # max per-write latency
+        "lat_hist": jnp.zeros(cfg.lat_buckets, jnp.int32),
     }
     # every registered JAX scheme contributes its state slice (sch_<name>_*)
     # to every volume — heterogeneous fleets need one pytree structure, and
@@ -524,6 +599,7 @@ def _gc_once(cfg: JaxSimConfig, st, victim):
         reclaimed=st["reclaimed"] + 1,
         overflow=overflow,
         class_gc=st["class_gc"] + k,
+        **_gc_time_debt(cfg, st, k_total),
     )
 
 
@@ -532,16 +608,69 @@ def _gp(st):
     return 1.0 - st["total_valid"].astype(jnp.float32) / occ
 
 
+# -- GC scheduling + the timing/SLO model -------------------------------------
+
+def _gc_time_debt(cfg: JaxSimConfig, st, k_total) -> dict:
+    """State delta booking one victim rewrite's device time as lat_debt.
+    Empty (an exact no-op on the jaxpr) with the timing model off."""
+    if not cfg.timing:
+        return {}
+    return {"lat_debt": st["lat_debt"]
+            + k_total.astype(jnp.float32) * jnp.float32(cfg.gc_block_cost)}
+
+
+def _gc_deferred(cfg: JaxSimConfig, st):
+    """idle_window's defer predicate, evaluated per GC iteration: skip GC
+    while the recent-write density EWMA says the foreground is busy, unless
+    the free pool has drained to the hard watermark (then GC runs regardless
+    — the override that keeps the pool from exhausting). False for greedy
+    and rate_limited volumes, so their GC decisions are untouched."""
+    idle = st["p_gcsched"] == GCSCHED_IDS["idle_window"]
+    hot = st["lat_dens"] > jnp.float32(cfg.idle_density)
+    free_rows = jnp.sum((st["seg_state"] == 0).astype(jnp.int32))
+    return idle & hot & (free_rows >= cfg.watermark_rows)
+
+
+def _charge_gc(cfg: JaxSimConfig, st):
+    """Move accrued GC debt onto the foreground busy horizon (end of tick).
+
+    greedy and idle_window charge the whole debt the tick it accrues;
+    rate_limited caps the charge at ``gc_rate * gc_block_cost`` per tick and
+    carries the rest — identical GC *decisions* (non-lat state bit-equal to
+    greedy), different *timing*. Conservation invariant (pinned in
+    tests/test_timing.py): lat_charged + lat_debt == gc_writes * gc_block_cost.
+    """
+    if not cfg.timing:
+        return st
+    cap = jnp.float32(cfg.gc_rate * cfg.gc_block_cost)
+    limited = st["p_gcsched"] == GCSCHED_IDS["rate_limited"]
+    charge = jnp.where(limited, jnp.minimum(st["lat_debt"], cap),
+                       st["lat_debt"])
+    return dict(
+        st,
+        lat_busy=jnp.maximum(st["lat_busy"], st["lat_now"]) + charge,
+        lat_debt=st["lat_debt"] - charge,
+        lat_charged=st["lat_charged"] + charge,
+    )
+
+
 def _maybe_gc(cfg: JaxSimConfig, st):
     """GC trigger loop, tick formulation: the cheap GP guard alone gates the
     loop, and victim selection (a full masked argmax over the segment pool)
     moved *inside* the body — the legacy formulation paid that argmax at loop
     entry on every user write, GC or not. A triggering state with no
     eligible victim sets ``stalled`` after one selection and exits (the
-    legacy loop's ``victim >= 0`` entry guard, one iteration later)."""
+    legacy loop's ``victim >= 0`` entry guard, one iteration later).
+
+    ``_gc_deferred`` joins the guard: an idle_window volume skips GC while
+    the foreground is busy (unless the free-pool watermark overrides), and
+    the predicate re-evaluates each iteration so a watermark-forced burst
+    stops as soon as the pool recovers. Greedy volumes see a constant-False
+    term — their iteration sequence is unchanged."""
     def cond(carry):
         st, i, stalled = carry
-        return (_gp(st) > st["p_gp"]) & ~stalled & (i < cfg.max_gc_per_step)
+        return (_gp(st) > st["p_gp"]) & ~_gc_deferred(cfg, st) & ~stalled \
+            & (i < cfg.max_gc_per_step)
 
     def body(carry):
         st, i, stalled = carry
@@ -574,6 +703,7 @@ def fleet_gc_tick(cfg: JaxSimConfig, st, step_active=None):
     what keeps fleet replays bit-identical to single-volume runs."""
     def need(st, stalled):
         over = jax.vmap(_gp)(st) > st["p_gp"]
+        over = over & ~jax.vmap(functools.partial(_gc_deferred, cfg))(st)
         over = over & ~stalled
         if step_active is not None:
             over = over & step_active
@@ -692,6 +822,7 @@ def _gc_once_legacy(cfg: JaxSimConfig, st, victim):
         reclaimed=st["reclaimed"] + 1,
         overflow=overflow,
         class_gc=class_gc,
+        **_gc_time_debt(cfg, st, k_total),
     )
 
 
@@ -758,6 +889,28 @@ def _user_write(cfg: JaxSimConfig, st, lba, nxt):
     seg_ctime = st["seg_ctime"].at[fresh].set(jnp.where(sealed_now, t, st["seg_ctime"][fresh]))
     open_sid = st["open_sid"].at[cls].set(jnp.where(sealed_now, fresh, sid))
 
+    # recent-write density EWMA (idle_window's defer signal): updated on
+    # every real user write regardless of cfg.timing — pad steps are masked
+    # no-ops, so fleet replays stay bit-identical to single-volume runs
+    a = jnp.float32(1.0 / cfg.density_window)
+    lat = {"lat_dens": st["lat_dens"] * (1.0 - a) + a}
+    if cfg.timing:
+        # closed-loop service model: this write arrives when the previous
+        # one completed (lat_now), waits for any charged GC work still
+        # occupying the device (lat_busy), then takes write_cost to serve
+        wc = jnp.float32(cfg.write_cost)
+        arrive = st["lat_now"]
+        latency = jnp.maximum(st["lat_busy"] - arrive, 0.0) + wc
+        bucket = jnp.clip(
+            jnp.floor(LAT_BUCKETS_PER_OCTAVE * jnp.log2(latency / wc)),
+            0, cfg.lat_buckets - 1).astype(jnp.int32)
+        lat.update(
+            lat_now=arrive + latency,
+            lat_sum=st["lat_sum"] + latency,
+            lat_max=jnp.maximum(st["lat_max"], latency),
+            lat_hist=st["lat_hist"].at[bucket].add(1),
+        )
+
     st = dict(
         st,
         seg_lba=seg_lba, seg_utime=seg_utime, seg_valid=seg_valid,
@@ -771,17 +924,20 @@ def _user_write(cfg: JaxSimConfig, st, lba, nxt):
         overflow=st["overflow"]
         + (sealed_now & (fresh == cfg.pad_row)).astype(jnp.int32),
         class_user=st["class_user"].at[cls].add(1),
+        **lat,
     )
     return st
 
 
 def _user_step(cfg: JaxSimConfig, st, lba, nxt):
-    """One user write followed by the GC trigger loop (the single-volume
-    scan step; fleet mode runs the write vmapped and GC as a fleet tick)."""
+    """One user write followed by the GC trigger loop and (with the timing
+    model on) the end-of-tick GC time charge — the single-volume scan step;
+    fleet mode runs the write vmapped, GC as a fleet tick, and the same
+    charge vmapped after it, so the per-volume op sequence is identical."""
     st = _user_write(cfg, st, lba, nxt)
-    if cfg.gc_engine == "legacy":
-        return _maybe_gc_legacy(cfg, st)
-    return _maybe_gc(cfg, st)
+    st = _maybe_gc_legacy(cfg, st) if cfg.gc_engine == "legacy" \
+        else _maybe_gc(cfg, st)
+    return _charge_gc(cfg, st)
 
 
 # -- BIT annotations (future-knowledge schemes) -------------------------------
@@ -856,23 +1012,60 @@ def _run(cfg: JaxSimConfig, trace: jnp.ndarray, policy: dict | None = None,
     return st
 
 
+def hist_quantile(hist, q: float, write_cost: float = 1.0) -> float:
+    """q-quantile latency from a quarter-octave histogram (lower bucket
+    edge, so an all-bucket-0 histogram reports exactly ``write_cost``)."""
+    hist = np.asarray(hist)
+    total = int(hist.sum())
+    if total == 0:
+        return 0.0
+    target = int(np.ceil(q * total))
+    idx = int(np.searchsorted(np.cumsum(hist), target))
+    return float(write_cost * 2.0 ** (idx / LAT_BUCKETS_PER_OCTAVE))
+
+
+def latency_summary(cfg: JaxSimConfig, st: dict) -> dict:
+    """Foreground-latency stats from a (host-side) final volume state."""
+    user = int(st["user_writes"])
+    hist = np.asarray(st["lat_hist"])
+    return {
+        "p50": hist_quantile(hist, 0.50, cfg.write_cost),
+        "p99": hist_quantile(hist, 0.99, cfg.write_cost),
+        "max": float(st["lat_max"]),
+        "mean": float(st["lat_sum"]) / max(user, 1),
+        "total": float(st["lat_sum"]),
+        "gc_time_charged": float(st["lat_charged"]),
+        "gc_debt": float(st["lat_debt"]),
+        "write_cost": cfg.write_cost,
+        "hist": hist.tolist(),
+    }
+
+
 def _summary(cfg: JaxSimConfig, st: dict) -> dict:
     """Summary-stats dict from a (host-side) final state of one volume."""
     user = int(st["user_writes"])
     gc_writes = int(st["gc_writes"])
-    return {
+    overflow = int(st["overflow"])
+    out = {
         "scheme": SCHEME_NAMES[int(st["p_scheme"])],
         "selector": SELECTOR_NAMES[int(st["p_selector"])],
         "gp_threshold": float(st["p_gp"]),
+        "gcsched": GCSCHED_NAMES[int(st["p_gcsched"])],
         "user_writes": user,
         "gc_writes": gc_writes,
         "wa": (user + gc_writes) / user if user else 1.0,
         "reclaimed": int(st["reclaimed"]),
-        "free_exhausted": int(st["overflow"]),
+        "overflow": overflow,
+        "free_exhausted": overflow,
+        "degraded": overflow > 0,   # pad-row-aliased accounting: WA et al.
+        #                             are logical, not physical, past here
         "ell": float(st["ell"]),
         "class_user_writes": np.asarray(st["class_user"]).tolist(),
         "class_gc_writes": np.asarray(st["class_gc"]).tolist(),
     }
+    if cfg.timing:
+        out["latency"] = latency_summary(cfg, st)
+    return out
 
 
 def simulate_jax(trace: np.ndarray, cfg: JaxSimConfig,
@@ -958,6 +1151,18 @@ def fleet_body(cfg: JaxSimConfig, masked: bool, traces: jnp.ndarray,
             lbas, nxs = x
             st = jax.vmap(functools.partial(write, cfg))(st, lbas, nxs)
             st = fleet_gc_tick(cfg, st, (lbas >= 0) if masked else None)
+            if cfg.timing:
+                new = jax.vmap(functools.partial(_charge_gc, cfg))(st)
+                if masked:
+                    # pad steps stay exact no-ops: a finished volume must not
+                    # keep draining rate_limited debt the single run wouldn't
+                    active = lbas >= 0
+                    new = jax.tree_util.tree_map(
+                        lambda a, b: jnp.where(
+                            active.reshape(active.shape
+                                           + (1,) * (a.ndim - 1)), a, b),
+                        new, st)
+                st = new
             return st, None
 
     st, _ = jax.lax.scan(step, st, (traces.T, nxts.T))
@@ -977,17 +1182,29 @@ def summarize_fleet(cfg: JaxSimConfig, st: dict, n_volumes: int) -> dict:
             for i in range(n_volumes)]
     user = sum(r["user_writes"] for r in vols)
     gc = sum(r["gc_writes"] for r in vols)
-    return {
-        "volumes": vols,
-        "fleet": {
-            "n_volumes": n_volumes,
-            "user_writes": user,
-            "gc_writes": gc,
-            "wa": (user + gc) / max(user, 1),
-            "free_exhausted": sum(r["free_exhausted"] for r in vols),
-            "per_volume_wa": [r["wa"] for r in vols],
-        },
+    overflow = sum(r["overflow"] for r in vols)
+    fleet = {
+        "n_volumes": n_volumes,
+        "user_writes": user,
+        "gc_writes": gc,
+        "wa": (user + gc) / max(user, 1),
+        "overflow": overflow,
+        "free_exhausted": overflow,
+        "degraded": overflow > 0,
+        "per_volume_wa": [r["wa"] for r in vols],
     }
+    if cfg.timing:
+        # fleet-level quantiles come from the merged histogram, not from
+        # averaging per-volume quantiles (which has no meaning for p99)
+        hist = np.asarray(st["lat_hist"])[:n_volumes].sum(axis=0)
+        fleet["latency"] = {
+            "p50": hist_quantile(hist, 0.50, cfg.write_cost),
+            "p99": hist_quantile(hist, 0.99, cfg.write_cost),
+            "max": max((r["latency"]["max"] for r in vols), default=0.0),
+            "mean": sum(r["latency"]["total"] for r in vols) / max(user, 1),
+            "gc_debt": sum(r["latency"]["gc_debt"] for r in vols),
+        }
+    return {"volumes": vols, "fleet": fleet}
 
 
 def coerce_fleet(traces) -> np.ndarray:

@@ -246,6 +246,31 @@ def test_gc_tick_conserves_valid_blocks_and_skips_cold_volumes(data):
                 err_msg=f"cold volume {i}: state[{key}] changed by the tick")
 
 
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, _FN - 1), min_size=_FV * _FT, max_size=_FV * _FT),
+       st.lists(st.sampled_from(["nosep", "sepgc", "sepbit"]),
+                min_size=_FV, max_size=_FV))
+def test_idle_window_watermark_prevents_exhaustion(lbas, schemes):
+    """For any overwrite-heavy traces: ``idle_window`` defers GC while write
+    density is high (a dense trace keeps the density EWMA saturated, so it
+    defers *every* garbage-triggered GC), yet the free-pool watermark
+    override must keep the pool from exhausting — no volume ever records an
+    overflow, and nothing lands in the sacrificial pad row."""
+    from repro.core.fleetshard import encode_policies, simulate_fleet_hetero
+    traces = np.asarray(lbas, np.int32).reshape(_FV, _FT)
+    policy = encode_policies(_FV, schemes=schemes, selectors="cost_benefit",
+                             gp_thresholds=0.10, gcscheds="idle_window")
+    res, state = simulate_fleet_hetero(traces, _fleet_cfg(), policy,
+                                       return_state=True)
+    pad_row = state["seg_n"].shape[1] - 1
+    for i, vol in enumerate(res["volumes"]):
+        assert vol["gcsched"] == "idle_window"
+        assert vol["overflow"] == 0
+        assert vol["degraded"] is False
+        assert int(state["seg_n"][i, pad_row]) == 0
+    assert res["fleet"]["overflow"] == 0
+
+
 @given(st.lists(st.integers(1, 200), min_size=4, max_size=60))
 def test_logkv_tables_consistent(page_counts):
     """Whatever the traffic, page tables always point at live pages of the

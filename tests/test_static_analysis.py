@@ -77,6 +77,17 @@ def test_engine_tick_analyzes_clean():
     assert analysis.analyze_engine(CFG) == []
 
 
+@pytest.mark.parametrize("gc_sched", ["rate_limited", "idle_window"])
+def test_timing_engine_analyzes_clean(gc_sched):
+    """The timing/SLO paths (latency accounting, histogram bucketing, GC
+    scheduling deferral and end-of-tick charging) keep the same contracts:
+    the lat_* slices are part of the carried spec (SA202-checked) and the
+    float→int histogram-bucket cast is clip-bounded (no SA201)."""
+    cfg = tracing.probe_config(timing=True, gc_sched=gc_sched)
+    findings = analysis.analyze_engine(cfg)
+    assert findings == [], [str(f) for f in findings]
+
+
 FIXTURES = fixtures.violation_fixtures()
 
 

@@ -1,0 +1,171 @@
+"""Deterministic unit tests for the GC latency/SLO timing model.
+
+The timing model (jaxsim ``cfg.timing`` + the traced ``p_gcsched`` policy)
+is observational under greedy — the differential suite pins that — so these
+tests focus on the accounting itself: charged-time conservation, histogram
+semantics, the rate_limited charge cap, and idle_window's watermark
+override. docs/gc_scheduling.md documents the model.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fleetshard import (encode_policies, matching_single_config,
+                                   simulate_fleet_hetero)
+from repro.core.jaxsim import (GCSCHED_IDS, JaxSimConfig, _run, _summary,
+                               default_policy, hist_quantile, simulate_jax,
+                               state_spec)
+
+N, SEG = 96, 8
+BASE = JaxSimConfig(n_lbas=N, segment_size=SEG, timing=True)
+
+
+def _trace(size, seed=0, n=N):
+    return np.asarray(np.random.default_rng(seed).integers(0, n, size=size),
+                      np.int32)
+
+
+def _final(cfg, tr, policy=None):
+    return jax.device_get(_run(cfg, jnp.asarray(tr), policy))
+
+
+def test_latency_accounting_conserves_charged_time():
+    """Every unit of GC device time is accounted for exactly once:
+    lat_charged + lat_debt == gc_writes * gc_block_cost, the histogram
+    counts every user write, and the foreground clock equals the latency
+    sum (the closed-loop model advances it by exactly each latency)."""
+    cfg = dataclasses.replace(BASE, gc_block_cost=2.0)
+    st = _final(cfg, _trace(6 * N, seed=1))
+    assert int(st["gc_writes"]) > 0
+    assert float(st["lat_charged"]) + float(st["lat_debt"]) \
+        == pytest.approx(int(st["gc_writes"]) * cfg.gc_block_cost)
+    assert int(np.asarray(st["lat_hist"]).sum()) == int(st["user_writes"])
+    assert float(st["lat_now"]) == float(st["lat_sum"])
+    assert float(st["lat_sum"]) >= int(st["user_writes"]) * cfg.write_cost
+
+
+def test_zero_gc_trace_p99_equals_service_time():
+    """A trace that never triggers GC has every latency == write_cost, so
+    p50 == p99 == max == mean == write_cost exactly."""
+    cfg = dataclasses.replace(BASE, write_cost=3.0)
+    tr = np.arange(N, dtype=np.int32)  # unique LBAs, well under capacity
+    st = _final(cfg, tr)
+    assert int(st["gc_writes"]) == 0
+    lat = _summary(cfg, st)["latency"]
+    assert lat["p50"] == lat["p99"] == lat["max"] == cfg.write_cost
+    assert lat["mean"] == pytest.approx(cfg.write_cost)
+
+
+def test_rate_limited_caps_per_write_wait():
+    """rate_limited bounds any single write's queueing behind GC at the
+    per-tick charge cap, so max latency <= write_cost + gc_rate *
+    gc_block_cost — while greedy's max on the same trace exceeds it."""
+    tr = _trace(6 * N, seed=2)
+    cfg_rl = dataclasses.replace(BASE, gc_sched="rate_limited", gc_rate=2)
+    st_g = _final(BASE, tr)
+    st_r = _final(cfg_rl, tr, default_policy(cfg_rl))
+    cap = cfg_rl.write_cost + cfg_rl.gc_rate * cfg_rl.gc_block_cost
+    assert float(st_r["lat_max"]) <= cap
+    assert float(st_g["lat_max"]) > cap
+    g = _summary(BASE, st_g)["latency"]
+    r = _summary(cfg_rl, st_r)["latency"]
+    assert r["p99"] < g["p99"]
+
+
+def test_idle_window_watermark_prevents_exhaustion():
+    """On an all-write trace the density EWMA saturates, so idle_window
+    defers every GC — only the free-pool watermark override runs it. With
+    the override live the pool never exhausts; with it disabled
+    (gc_watermark=0: the free count can never go below zero) the same
+    config overflows, proving the override is what carries the invariant."""
+    tr = _trace(8 * N, seed=3)
+    cfg = dataclasses.replace(BASE, n_segments=24, gp_threshold=0.10,
+                              gc_sched="idle_window")
+    st = _final(cfg, tr, default_policy(cfg))
+    assert int(st["overflow"]) == 0
+    assert int(st["reclaimed"]) > 0  # the override actually ran GC
+    off = dataclasses.replace(cfg, gc_watermark=0)
+    st_off = _final(off, tr, default_policy(off))
+    assert int(st_off["overflow"]) > 0
+    assert int(st["gc_writes"]) < int(_final(
+        dataclasses.replace(cfg, gc_sched="greedy"), tr)["gc_writes"])
+
+
+def test_fleet_timing_matches_single_bitwise():
+    """Heterogeneous-length fleet replay (masked pad steps + the vmapped
+    end-of-tick charge) reproduces each single-volume run bit-for-bit,
+    lat_* slices included — pad steps must not keep draining debt."""
+    lengths = (5 * N, 4 * N, 3 * N)
+    traces = [_trace(sz, seed=10 + i) for i, sz in enumerate(lengths)]
+    pol = encode_policies(3, schemes="sepbit",
+                          gcscheds=["greedy", "rate_limited", "idle_window"])
+    _, st = simulate_fleet_hetero(traces, BASE, pol, shard=False,
+                                  return_state=True)
+    per_class = {"open_sid", "class_user", "class_gc"}
+    for i in range(3):
+        cfg_i = matching_single_config(BASE, pol, i)
+        assert cfg_i.gc_sched == pol.gcsched(i)
+        si = _final(cfg_i, np.asarray(traces[i], np.int32))
+        for k in si:
+            if k.startswith("p_"):
+                continue
+            a, b = np.asarray(st[k][i]), np.asarray(si[k])
+            if k in per_class:  # fleet pads the class axis
+                a = a[: cfg_i.n_classes]
+            np.testing.assert_array_equal(
+                a, b, err_msg=f"volume {i} state[{k}] diverged")
+
+
+def test_summary_latency_fields():
+    tr = _trace(4 * N, seed=4)
+    r = simulate_jax(tr, BASE)
+    assert r["gcsched"] == "greedy"
+    lat = r["latency"]
+    assert set(lat) >= {"p50", "p99", "max", "mean", "total",
+                        "gc_time_charged", "gc_debt", "hist"}
+    assert lat["p50"] <= lat["p99"] <= lat["max"]
+    r_off = simulate_jax(tr, JaxSimConfig(n_lbas=N, segment_size=SEG))
+    assert "latency" not in r_off
+    assert r_off["overflow"] == 0 and r_off["degraded"] is False
+
+
+def test_hist_quantile_lower_edge_semantics():
+    hist = np.zeros(64, np.int64)
+    hist[0] = 99   # latency == write_cost
+    hist[8] = 1    # one 4x-write_cost straggler
+    assert hist_quantile(hist, 0.50, 2.0) == 2.0
+    assert hist_quantile(hist, 0.99, 2.0) == 2.0
+    assert hist_quantile(hist, 1.00, 2.0) == 2.0 * 2.0 ** (8 / 4)
+    assert hist_quantile(np.zeros(4), 0.5) == 0.0
+
+
+def test_state_spec_covers_lat_keys():
+    """The lat_* slices are part of the canonical carried-state spec, so
+    the SA202 drift gate covers them."""
+    spec = state_spec(BASE)
+    lat = {k: v for k, v in spec.items() if k.startswith("lat_")}
+    assert set(lat) == {"lat_now", "lat_busy", "lat_debt", "lat_charged",
+                        "lat_dens", "lat_sum", "lat_max", "lat_hist"}
+    assert spec["lat_hist"].shape == (BASE.lat_buckets,)
+    assert spec["p_gcsched"].dtype == jnp.int32
+    # structure is timing-independent: one pytree for both modes
+    assert set(spec) == set(state_spec(
+        dataclasses.replace(BASE, timing=False)))
+
+
+def test_gcsched_validation():
+    with pytest.raises(ValueError, match="gc_sched"):
+        default_policy(dataclasses.replace(BASE, gc_sched="nope"))
+    with pytest.raises(ValueError, match="tick engine"):
+        default_policy(dataclasses.replace(BASE, gc_engine="legacy",
+                                           gc_sched="idle_window"))
+    with pytest.raises(ValueError, match="tick engine"):
+        simulate_fleet_hetero(
+            [np.arange(8, dtype=np.int32)],
+            dataclasses.replace(BASE, gc_engine="legacy"),
+            encode_policies(1, gcscheds="rate_limited"))
+    assert GCSCHED_IDS["greedy"] == 0  # the all-zeros default policy
