@@ -182,8 +182,8 @@ def obs_trace_analysis(full=False):
         short_fracs.append(100 * np.mean(spans < 0.5 * n) if len(spans) else 0)
         rare_fracs.append(100 * np.mean(count[count > 0] <= 4))
         hot = np.argsort(-count)[: max(n // 100, 1)]
-        cv = [np.std(per_lba_spans[l]) / np.mean(per_lba_spans[l])
-              for l in hot if l in per_lba_spans and len(per_lba_spans[l]) > 3]
+        cv = [np.std(per_lba_spans[i]) / np.mean(per_lba_spans[i])
+              for i in hot if i in per_lba_spans and len(per_lba_spans[i]) > 3]
         if cv:
             cvs.append(np.median(cv))
     us = (time.perf_counter() - t0) * 1e6
@@ -607,6 +607,9 @@ def analysis_bench(full=False):
     us, engine_findings = _timed(lambda: ra.analyze_engine(cfg))
     total += us
     _row("analysis/engine", us, f"findings={len(engine_findings)}")
+    us, fleet_findings = _timed(lambda: ra.analyze_fleet(cfg))
+    total += us
+    _row("analysis/fleet", us, f"findings={len(fleet_findings)}")
     _row("analysis/total", total, f"n_lbas={cfg.n_lbas}")
     us, report = _timed(lambda: ra.analyze_registry(cfg))
     _row("analysis/full_report", us, f"findings={report['n_findings']}")

@@ -13,26 +13,45 @@ the guarantees ``docs/placement_api.md`` promises scheme authors:
   too narrow to hold it exactly; the carried state pytree maps onto itself;
 * **purity** (SA401) — no host callbacks or effectful primitives;
 * **totality** (SA301/SA302) — class outputs are int32 and provably inside
-  ``[0, n_classes)`` by interval analysis.
+  ``[0, n_classes)`` by interval analysis;
+* **fleet isolation** (SA501–SA504) — a batch-axis provenance pass over the
+  vmapped fleet tick and the ``shard_map`` body proves per-volume
+  independence (no cross-volume mixing), collective-freedom over the
+  ``"fleet"`` mesh axis, donation/aliasing safety, and volume-axis shape
+  stability across the tick boundary.
 
 See ``docs/static_analysis.md`` for the full finding-code reference.
 """
 
 from .fixtures import ViolationFixture, violation_fixtures
-from .lints import (ALLOWED_SHARED_READS, CODES, Finding, analyze_engine,
-                    analyze_kernels, analyze_scheme)
+from .lints import (
+    ALLOWED_SHARED_READS,
+    CODES,
+    FLEET_AXIS,
+    FLEET_SUMMARY_ALLOWLIST,
+    FLEET_TRACE_LABELS,
+    Finding,
+    analyze_engine,
+    analyze_fleet,
+    analyze_fleet_fixture,
+    analyze_kernels,
+    analyze_scheme,
+)
 from .manifest import Manifest, state_manifest
 from .tracing import probe_config
 
 __all__ = [
-    "ALLOWED_SHARED_READS", "CODES", "Finding", "Manifest",
-    "ViolationFixture", "analyze_engine", "analyze_kernels",
-    "analyze_registry", "analyze_scheme", "probe_config",
+    "ALLOWED_SHARED_READS", "CODES", "FLEET_AXIS",
+    "FLEET_SUMMARY_ALLOWLIST", "FLEET_TRACE_LABELS", "Finding", "Manifest",
+    "ViolationFixture",
+    "analyze_engine", "analyze_fleet", "analyze_fleet_fixture",
+    "analyze_kernels", "analyze_registry", "analyze_scheme", "probe_config",
     "state_manifest", "violation_fixtures",
 ]
 
 
-def analyze_registry(cfg=None, *, schemes=None, kernels=True, engine=True):
+def analyze_registry(cfg=None, *, schemes=None, kernels=True, engine=True,
+                     fleet=True):
     """Run every lint over the registered JAX zoo. Returns a JSON-ready
     report dict; ``report["n_findings"] == 0`` is the contract gate."""
     from repro.core.placement import registry
@@ -42,6 +61,7 @@ def analyze_registry(cfg=None, *, schemes=None, kernels=True, engine=True):
     report = {
         "config": {"n_lbas": cfg.n_lbas, "segment_size": cfg.segment_size},
         "schemes": {}, "kernels": {}, "engine": {"findings": []},
+        "fleet": {"labels": [], "findings": []},
         "n_findings": 0,
     }
     n = 0
@@ -66,5 +86,10 @@ def analyze_registry(cfg=None, *, schemes=None, kernels=True, engine=True):
         findings = analyze_engine(cfg)
         n += len(findings)
         report["engine"]["findings"] = [f.as_dict() for f in findings]
+    if fleet:
+        findings = analyze_fleet(cfg)
+        n += len(findings)
+        report["fleet"]["labels"] = list(FLEET_TRACE_LABELS)
+        report["fleet"]["findings"] = [f.as_dict() for f in findings]
     report["n_findings"] = n
     return report

@@ -1,7 +1,8 @@
 """CLI for the placement-contract verifier (`python -m repro.analysis`).
 
 Exit codes: 0 = clean, 1 = findings, 2 = ``--selftest`` failed (a seeded
-violation fixture was not flagged with its expected code set).
+violation fixture was not flagged with its expected code set) or a bad
+argument (unknown ``--schemes`` name).
 """
 
 from __future__ import annotations
@@ -10,7 +11,7 @@ import argparse
 import json
 import sys
 
-from . import analyze_registry, analyze_scheme, probe_config
+from . import analyze_fleet_fixture, analyze_registry, analyze_scheme, probe_config
 from .fixtures import violation_fixtures
 
 
@@ -37,6 +38,11 @@ def _print_human(report, out=sys.stdout):
       file=out)
     for f in eng:
         p(f"  !! {f['code']} [{f['where']}] {f['message']}", file=out)
+    flt = report["fleet"]["findings"]
+    p("fleet  vmapped tick + shard_map body: "
+      f"{'OK' if not flt else 'FINDINGS'}", file=out)
+    for f in flt:
+        p(f"  !! {f['code']} [{f['where']}] {f['message']}", file=out)
     p(f"total findings: {report['n_findings']}", file=out)
 
 
@@ -44,9 +50,13 @@ def _selftest(cfg, out=sys.stdout) -> int:
     """Analyze every seeded violation fixture; each must emit exactly its
     expected finding-code set (the analyzer proving it still catches every
     class of contract bug)."""
+    fixtures = violation_fixtures()
     failures = 0
-    for fx in violation_fixtures():
-        findings, _ = analyze_scheme(cfg, fx.name, fx.n_classes, fx.impl)
+    for fx in fixtures:
+        if fx.kind == "scheme":
+            findings, _ = analyze_scheme(cfg, fx.name, fx.n_classes, fx.impl)
+        else:
+            findings = analyze_fleet_fixture(cfg, fx)
         got = frozenset(f.code for f in findings)
         ok = got == fx.expect
         failures += not ok
@@ -56,16 +66,33 @@ def _selftest(cfg, out=sys.stdout) -> int:
         if not ok:
             for f in findings:
                 print(f"    {f}", file=out)
-    print(f"selftest: {6 - failures}/6 fixtures flagged as expected",
-          file=out)
+    print(f"selftest: {len(fixtures) - failures}/{len(fixtures)} "
+          "fixtures flagged as expected", file=out)
     return 2 if failures else 0
+
+
+def _parse_schemes(arg: str | None) -> list[str] | None:
+    """Validate a ``--schemes`` filter against the registry; unknown names
+    are a usage error (exit 2), not a silently empty report."""
+    if not arg:
+        return None
+    from repro.core.placement import registry
+    valid = sorted(sd.name for sd, _ in registry.jax_schemes())
+    names = [s.strip() for s in arg.split(",") if s.strip()]
+    unknown = sorted(set(names) - set(valid))
+    if unknown:
+        raise ValueError(
+            f"error: unknown scheme(s): {', '.join(unknown)}; "
+            f"valid schemes: {', '.join(valid)}")
+    return names
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="Statically verify the placement-API contracts over "
-                    "the registered scheme zoo, kernels, and tick engine.")
+                    "the registered scheme zoo, kernels, tick engine, and "
+                    "fleet engine.")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the JSON report to PATH ('-' for stdout)")
     ap.add_argument("--schemes", default=None,
@@ -74,6 +101,9 @@ def main(argv=None) -> int:
                     help="skip the kernel entry points")
     ap.add_argument("--no-engine", action="store_true",
                     help="skip the engine tick trace")
+    ap.add_argument("--no-fleet", action="store_true",
+                    help="skip the fleet-isolation pass (vmapped tick + "
+                         "shard_map body)")
     ap.add_argument("--n-lbas", type=int, default=256)
     ap.add_argument("--segment-size", type=int, default=16)
     ap.add_argument("--selftest", action="store_true",
@@ -85,10 +115,15 @@ def main(argv=None) -> int:
     if args.selftest:
         return _selftest(cfg)
 
-    schemes = args.schemes.split(",") if args.schemes else None
+    try:
+        schemes = _parse_schemes(args.schemes)
+    except ValueError as exc:
+        print(exc, file=sys.stderr)
+        return 2
     report = analyze_registry(cfg, schemes=schemes,
                               kernels=not args.no_kernels,
-                              engine=not args.no_engine)
+                              engine=not args.no_engine,
+                              fleet=not args.no_fleet)
     if args.json == "-":
         json.dump(report, sys.stdout, indent=2)
         print()

@@ -24,7 +24,13 @@ class ViolationFixture:
     clause: str               # the placement-API guarantee it breaks
     expect: frozenset         # exact finding-code set the analyzer must emit
     n_classes: int
-    impl: JaxPlacement
+    impl: JaxPlacement        # or, for fleet kinds, a (cfg, state) -> state fn
+    # "scheme" fixtures are JaxPlacement triples run through analyze_scheme;
+    # "fleet" fixtures are batched-state step functions run through the
+    # SA5xx battery (analyze_fleet_fixture); "fleet_shard" additionally
+    # wraps the step in shard_map over a "fleet" mesh axis (collectives
+    # only bind inside a mesh context).
+    kind: str = "scheme"
 
 
 def _clean_gc(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
@@ -120,6 +126,60 @@ def _host_callback() -> ViolationFixture:
         JaxPlacement(lambda cfg: {}, user_class, _clean_gc))
 
 
+# -- fleet-isolation fixtures (SA5xx) ------------------------------------------
+# Each is a step over the *batched* (V-leading) engine state — the shape of
+# `fleet_step` — breaking one fleet-isolation guarantee.
+
+def _cross_volume_mix() -> ViolationFixture:
+    """Prefix-sums the write clock along the volume axis: volume v's
+    carried clock now depends on volumes 0..v-1."""
+
+    def step(cfg, st):
+        return dict(st, t=jnp.cumsum(st["t"]))
+
+    return ViolationFixture(
+        "vxmix", "no cross-volume state mixing", frozenset({"SA501"}), 0,
+        step, kind="fleet")
+
+
+def _fleet_collective() -> ViolationFixture:
+    """All-reduces the write clock over the fleet mesh axis — a collective
+    in the sharded body (which also, necessarily, mixes volumes)."""
+
+    def step(cfg, st):
+        return dict(st, t=jax.lax.psum(st["t"], "fleet"))
+
+    return ViolationFixture(
+        "vxcoll", "the sharded body is collective-free",
+        frozenset({"SA501", "SA502"}), 0, step, kind="fleet_shard")
+
+
+def _aliased_donation() -> ViolationFixture:
+    """Returns the same input buffer as two different state leaves: under
+    buffer donation both live leaves would share storage."""
+
+    def step(cfg, st):
+        return dict(st, last_uw=st["loc_off"])
+
+    return ViolationFixture(
+        "vxdonate", "no input buffer aliased into two outputs",
+        frozenset({"SA503"}), 0, step, kind="fleet")
+
+
+def _volume_rank_drift() -> ViolationFixture:
+    """Grows a rank on the clock leaf: the carried spec's volume axis
+    contract (V-leading, fixed rank) drifts across the tick."""
+
+    def step(cfg, st):
+        return dict(st, t=st["t"][:, None])
+
+    return ViolationFixture(
+        "vxrank", "state leaves keep the volume axis shape",
+        frozenset({"SA504"}), 0, step, kind="fleet")
+
+
 def violation_fixtures() -> tuple[ViolationFixture, ...]:
     return (_cross_slice_write(), _foreign_read(), _float_carry(),
-            _dtype_drift(), _unclamped(), _host_callback())
+            _dtype_drift(), _unclamped(), _host_callback(),
+            _cross_volume_mix(), _fleet_collective(), _aliased_donation(),
+            _volume_rank_drift())

@@ -172,6 +172,82 @@ def engine_trace(cfg):
         state_seeds=_SHARED_SEEDS)
 
 
+def batched_state_spec(cfg, n_volumes, impl=None):
+    """The fleet scan carry: every engine state leaf with a leading volume
+    axis (what ``vmap(init_state)`` produces)."""
+    return {k: jax.ShapeDtypeStruct((n_volumes,) + v.shape, v.dtype)
+            for k, v in full_state_spec(cfg, impl).items()}
+
+
+def _policy_spec(cfg, n_volumes):
+    return {k: jax.ShapeDtypeStruct((n_volumes,) + v.shape, v.dtype)
+            for k, v in jax.eval_shape(
+                lambda: jaxsim.default_policy(cfg)).items()}
+
+
+def fleet_traces(cfg, n_volumes=4, horizon=6):
+    """The vmapped fleet engine's entry points: one synchronized tick
+    (``fleet_step``), the GC tick loop alone (``fleet_gc_tick``), and the
+    whole replay (``fleet_body`` — vmapped init + scan over time). The
+    SA5xx volume-isolation lints run over these."""
+    V, T = n_volumes, horizon
+    spec = batched_state_spec(cfg, V)
+    vec = jax.ShapeDtypeStruct((V,), jnp.int32)
+    vecb = jax.ShapeDtypeStruct((V,), jnp.bool_)
+    mat = jax.ShapeDtypeStruct((V, T), jnp.int32)
+    step = trace(
+        "fleet.step",
+        lambda st, lbas, nxts: jaxsim.fleet_step(cfg, True, st, lbas, nxts),
+        (spec, vec, vec), state_arg=0, state_out="root",
+        state_seeds=_SHARED_SEEDS)
+    tick = trace(
+        "fleet.gc_tick",
+        lambda st, act: jaxsim.fleet_gc_tick(cfg, st, act),
+        (spec, vecb), state_arg=0, state_out="root",
+        state_seeds=_SHARED_SEEDS)
+    body = trace(
+        "fleet.body",
+        lambda tr, nx, pol: jaxsim.fleet_body(cfg, True, tr, nx, pol),
+        (mat, mat, _policy_spec(cfg, V)), state_out="root")
+    return [step, tick, body]
+
+
+def fleet_shard_trace(cfg, n_volumes=4, horizon=6, mesh=None):
+    """The exact ``shard_map(fleet_body)`` program `_sharded_runner` jits,
+    traced over whatever mesh is available (a 1-device mesh suffices: a
+    collective over the ``"fleet"`` axis is visible in the jaxpr no matter
+    the device count). The SA502 collective lint runs over this."""
+    from jax.sharding import Mesh
+
+    from repro.core import fleetshard
+    if mesh is None:
+        mesh = fleetshard.fleet_mesh(min_devices=2) or Mesh(
+            np.asarray(jax.devices()[:1]), ("fleet",))
+    V = -(-n_volumes // mesh.size) * mesh.size   # round up to a shard multiple
+    mat = jax.ShapeDtypeStruct((V, horizon), jnp.int32)
+    body = fleetshard.shard_mapped_body(cfg, True, mesh)
+    return trace("fleet.shard_body", body, (mat, mat, _policy_spec(cfg, V)),
+                 state_out="root")
+
+
+def fleet_fixture_trace(cfg, fx, n_volumes=4):
+    """Trace one fleet violation fixture: a batched-state step function,
+    shard_map-wrapped for ``kind == "fleet_shard"`` fixtures (collectives
+    only bind inside a mesh context)."""
+    spec = batched_state_spec(cfg, n_volumes)
+
+    def fn(st):
+        return fx.impl(cfg, st)
+    if fx.kind == "fleet_shard":
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("fleet",))
+        fn = shard_map(fn, mesh=mesh, in_specs=(PartitionSpec("fleet"),),
+                       out_specs=PartitionSpec("fleet"), check_rep=False)
+    return trace(f"fleet.{fx.name}", fn, (spec,), state_arg=0,
+                 state_out="root")
+
+
 def kernel_traces():
     """Traces of every kernel entry point declared for analysis (the Pallas
     classify / segment-select kernels and their jnp oracles)."""

@@ -49,6 +49,30 @@ def iter_eqns(jaxpr):
             yield from iter_eqns(sub)
 
 
+# -- collective classification -------------------------------------------------
+# Cross-device communication primitives: anything that moves data between
+# shards of a mesh axis. The fleet engine must never emit one over the
+# "fleet" axis — volumes are independent logs (lint SA502).
+
+_COLLECTIVE_PRIMITIVES = frozenset({
+    "psum", "psum2", "psum_invariant", "pmax", "pmin", "pgather",
+    "all_gather", "all_to_all", "ppermute", "pbroadcast", "reduce_scatter",
+})
+
+
+def collective_axes(eqn) -> tuple:
+    """Mesh axis names a collective equation communicates over; ``()`` for
+    non-collective equations."""
+    if eqn.primitive.name not in _COLLECTIVE_PRIMITIVES:
+        return ()
+    axes = eqn.params.get("axes", None)
+    if axes is None:
+        axes = eqn.params.get("axis_name", ())
+    if isinstance(axes, (str, int)):
+        axes = (axes,)
+    return tuple(a for a in axes if isinstance(a, str))
+
+
 # -- effect classification -----------------------------------------------------
 # Scheme bodies must be pure *to the host*: no callbacks, no infeed/outfeed.
 # jax-internal state effects (the ReadEffect/WriteEffect that Pallas kernel

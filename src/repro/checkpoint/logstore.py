@@ -18,8 +18,6 @@ import dataclasses
 import hashlib
 import json
 import os
-import struct
-import time
 
 
 @dataclasses.dataclass(frozen=True)

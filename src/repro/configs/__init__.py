@@ -1,5 +1,5 @@
 """Per-architecture configs (exact assigned dimensions) + registry."""
-from .base import SHAPES, ArchConfig, MoEConfig, ShapeConfig, shape_applicable
+from .base import ArchConfig, MoEConfig, SHAPES, ShapeConfig, shape_applicable
 from .registry import ARCH_IDS, get_config, smoke_config
 
 __all__ = ["SHAPES", "ArchConfig", "MoEConfig", "ShapeConfig",

@@ -3,8 +3,7 @@ baselines, GC policies, and trace-driven + JAX-native simulators."""
 
 from .blockstore import INF, Segment, Volume
 from .gc import GCPolicy, SELECTORS
-from .placement import (SCHEMES, Placement, SchemeDef, make_placement,
-                        registry)
+from .placement import Placement, SCHEMES, SchemeDef, make_placement, registry
 from .simulator import SimResult, annotate_next_write, simulate
 
 __all__ = [

@@ -42,11 +42,23 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .jaxsim import (GCSCHED_IDS, GCSCHED_NAMES, JaxSimConfig, SCHEME_CLASSES,
-                     SCHEME_IDS, SCHEME_NAMES, SELECTOR_IDS, SELECTOR_NAMES,
-                     _run_fleet, coerce_fleet, coerce_fleet_annotations,
-                     fleet_annotations, fleet_body, hist_quantile,
-                     summarize_fleet)
+from .jaxsim import (
+    GCSCHED_IDS,
+    GCSCHED_NAMES,
+    JaxSimConfig,
+    SCHEME_CLASSES,
+    SCHEME_IDS,
+    SCHEME_NAMES,
+    SELECTOR_IDS,
+    SELECTOR_NAMES,
+    _run_fleet,
+    coerce_fleet,
+    coerce_fleet_annotations,
+    fleet_annotations,
+    fleet_body,
+    hist_quantile,
+    summarize_fleet,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,15 +206,23 @@ def fleet_mesh(min_devices: int = 2) -> Mesh | None:
     return Mesh(np.asarray(devices), ("fleet",))
 
 
-@functools.lru_cache(maxsize=None)
-def _sharded_runner(cfg: JaxSimConfig, masked: bool, mesh: Mesh):
-    """jit(shard_map(fleet_body)) over the fleet axis. Volumes are fully
+def shard_mapped_body(cfg: JaxSimConfig, masked: bool, mesh: Mesh):
+    """`shard_map(fleet_body)` over the fleet axis — the exact (un-jitted)
+    sharded program, shared by :func:`_sharded_runner` and by
+    `repro.analysis` (the SA502 lint traces this body and proves it free of
+    collectives over the ``"fleet"`` mesh axis). Volumes are fully
     independent, so every input/output leaf shards its leading axis and the
     body runs collective-free on each device's slice of the fleet."""
     body = functools.partial(fleet_body, cfg, masked)
-    return jax.jit(shard_map(body, mesh=mesh,
-                             in_specs=(P("fleet"), P("fleet"), P("fleet")),
-                             out_specs=P("fleet"), check_rep=False))
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P("fleet"), P("fleet"), P("fleet")),
+                     out_specs=P("fleet"), check_rep=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_runner(cfg: JaxSimConfig, masked: bool, mesh: Mesh):
+    """jit-compiled :func:`shard_mapped_body`."""
+    return jax.jit(shard_mapped_body(cfg, masked, mesh))
 
 
 def scheme_groups(policy: FleetPolicy) -> list[tuple[str, np.ndarray]]:

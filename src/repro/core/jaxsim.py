@@ -1119,6 +1119,39 @@ def broadcast_policies(cfg: JaxSimConfig, n_volumes: int) -> dict:
     return {k: jnp.broadcast_to(v, (n_volumes,)) for k, v in pol.items()}
 
 
+def fleet_step(cfg: JaxSimConfig, masked: bool, st: dict, lbas: jnp.ndarray,
+               nxs: jnp.ndarray) -> dict:
+    """One synchronized fleet tick over a batched (V-leading) state: the
+    scan body of :func:`fleet_body`, factored out so `repro.analysis` can
+    trace the tick boundary in isolation (the SA5xx volume-isolation lints
+    compare this function's in/out state specs and provenance).
+
+    Tick engine (default): vmap the GC-free user write, then one fleet-level
+    :func:`fleet_gc_tick`. Legacy engine: vmap the full per-volume step
+    (write + `_maybe_gc_legacy`). ``masked`` is static: uniform-length
+    fleets (no -1 padding anywhere) skip the per-step state select."""
+    if cfg.gc_engine == "legacy":
+        inner = _masked_step if masked else _user_step
+        return jax.vmap(functools.partial(inner, cfg))(st, lbas, nxs)
+
+    write = _masked_write if masked else _user_write
+    st = jax.vmap(functools.partial(write, cfg))(st, lbas, nxs)
+    st = fleet_gc_tick(cfg, st, (lbas >= 0) if masked else None)
+    if cfg.timing:
+        new = jax.vmap(functools.partial(_charge_gc, cfg))(st)
+        if masked:
+            # pad steps stay exact no-ops: a finished volume must not
+            # keep draining rate_limited debt the single run wouldn't
+            active = lbas >= 0
+            new = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(
+                    active.reshape(active.shape
+                                   + (1,) * (a.ndim - 1)), a, b),
+                new, st)
+        st = new
+    return st
+
+
 def fleet_body(cfg: JaxSimConfig, masked: bool, traces: jnp.ndarray,
                nxts: jnp.ndarray, policies: dict) -> dict:
     """The (un-jitted) fleet replay: vmapped scan over a leading volume axis.
@@ -1128,42 +1161,12 @@ def fleet_body(cfg: JaxSimConfig, masked: bool, traces: jnp.ndarray,
     selector / GP threshold / nc window. ``nxts`` is the (V, T) BIT
     annotation matrix (see :func:`fleet_annotations`). Exposed un-jitted so
     `core/fleetshard.py` can wrap it in `shard_map` over the fleet axis.
-
-    Tick engine (default): each scan step vmaps the GC-free user write and
-    then runs one fleet-level :func:`fleet_gc_tick` — the GP guard gates the
-    whole GC machinery, so a step where no volume triggers skips victim
-    selection entirely. The legacy engine vmaps the full per-volume step
-    (write + `_maybe_gc_legacy`), which pays a per-volume victim argmax on
-    every user write. ``masked`` is static: uniform-length fleets (no -1
-    padding anywhere) skip the per-step state select entirely."""
+    Each scan step is one :func:`fleet_step`."""
     st = jax.vmap(lambda pol: init_state(cfg, pol))(policies)
 
-    if cfg.gc_engine == "legacy":
-        inner = _masked_step if masked else _user_step
-
-        def step(st, x):
-            lbas, nxs = x
-            return jax.vmap(functools.partial(inner, cfg))(st, lbas, nxs), None
-    else:
-        write = _masked_write if masked else _user_write
-
-        def step(st, x):
-            lbas, nxs = x
-            st = jax.vmap(functools.partial(write, cfg))(st, lbas, nxs)
-            st = fleet_gc_tick(cfg, st, (lbas >= 0) if masked else None)
-            if cfg.timing:
-                new = jax.vmap(functools.partial(_charge_gc, cfg))(st)
-                if masked:
-                    # pad steps stay exact no-ops: a finished volume must not
-                    # keep draining rate_limited debt the single run wouldn't
-                    active = lbas >= 0
-                    new = jax.tree_util.tree_map(
-                        lambda a, b: jnp.where(
-                            active.reshape(active.shape
-                                           + (1,) * (a.ndim - 1)), a, b),
-                        new, st)
-                st = new
-            return st, None
+    def step(st, x):
+        lbas, nxs = x
+        return fleet_step(cfg, masked, st, lbas, nxs), None
 
     st, _ = jax.lax.scan(step, st, (traces.T, nxts.T))
     return st

@@ -10,8 +10,7 @@ snapshot of the registry.
 
 from . import registry
 from .base import Placement
-from .registry import (JaxPlacement, SchemeDef, all_schemes, make_placement,
-                       scheme_names)
+from .registry import JaxPlacement, SchemeDef, all_schemes, make_placement, scheme_names
 
 # Deprecated alias: the historical name -> numpy-class mapping, a *snapshot*
 # of the registry taken at import time (a numpy_only scheme registered later

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..blockstore import INF, Segment, Volume
+from ..blockstore import Segment, Volume
 
 
 class Placement:

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..blockstore import INF, Segment, Volume
+from ..blockstore import INF
 from .base import Placement
 
 

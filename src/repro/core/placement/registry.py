@@ -272,8 +272,16 @@ def validate() -> None:
 
 from .baselines import FK, NoSep, SepGC                           # noqa: E402
 from .sepbit import SepBIT, SepBIT_GW, SepBIT_UW                  # noqa: E402
-from .temperature import (DAC, ETI, FADaC, MQ, SFR, SFS,          # noqa: E402
-                          WARCIP, MultiLog)
+from .temperature import (  # noqa: E402
+    DAC,
+    ETI,
+    FADaC,
+    MQ,
+    MultiLog,
+    SFR,
+    SFS,
+    WARCIP,
+)
 
 for _cls in (NoSep, SepGC, SepBIT, FK, DAC, MultiLog, SFS, SepBIT_UW,
              SepBIT_GW):

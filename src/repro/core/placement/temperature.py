@@ -14,7 +14,7 @@ import math
 
 import numpy as np
 
-from ..blockstore import INF, Segment, Volume
+from ..blockstore import INF
 from .base import Placement
 
 

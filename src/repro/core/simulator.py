@@ -14,7 +14,7 @@ import time
 
 import numpy as np
 
-from .blockstore import INF, Segment, Volume
+from .blockstore import INF, Volume
 from .gc import GCPolicy
 from .placement import Placement, make_placement
 

@@ -12,8 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .traces import (bursty_trace, hotcold_trace, mixed_trace, shifting_trace,
-                     zipf_trace)
+from .traces import bursty_trace, hotcold_trace, mixed_trace, shifting_trace, zipf_trace
 
 
 def default_pool(scale: int = 1) -> list[tuple[str, np.ndarray]]:

@@ -1,6 +1,5 @@
 """Distribution: logical-axis sharding, collectives, pipeline, elasticity."""
-from .sharding import (Sharder, ShardingOptions, abstract_params,
-                       null_sharder, spec_tree_shardings)
+from .sharding import Sharder, ShardingOptions, abstract_params, null_sharder, spec_tree_shardings
 
 __all__ = ["Sharder", "ShardingOptions", "abstract_params", "null_sharder",
            "spec_tree_shardings"]

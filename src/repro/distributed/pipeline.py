@@ -12,8 +12,6 @@ tests/test_distributed.py on a 4-device host mesh.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
@@ -34,7 +32,6 @@ def pipeline_apply(mesh: Mesh, block_fn, stacked_params, x_microbatches,
     M = x_microbatches.shape[0]
     L = jax.tree.leaves(stacked_params)[0].shape[0]
     assert L % S == 0, (L, S)
-    per_stage = L // S
     fwd = [(i, (i + 1) % S) for i in range(S - 1)]  # stage i -> i+1
 
     def stage_fn(params_local, x_mb):

@@ -22,7 +22,6 @@ Baseline rules (mesh axes: optional "pod", "data", "model"):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import numpy as np

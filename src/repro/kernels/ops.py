@@ -7,9 +7,6 @@ call with interpret=False — the BlockSpecs are written for v5e VMEM tiling.
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from .classify import classify
 from .decode_attn import flash_decode
 from .segsel import segment_select, segment_select_batch

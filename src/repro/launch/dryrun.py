@@ -103,7 +103,8 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
     if shape.kind == "train":
         opt_cfg = AdamWConfig(state_dtype=cfg.optimizer_dtype)
         step_fn = make_train_step(model, cfg, sharder, opt_cfg)
-        state = {"params": params, "opt": _abstract_opt_state(params, jnp.dtype(cfg.optimizer_dtype))}
+        opt = _abstract_opt_state(params, jnp.dtype(cfg.optimizer_dtype))
+        state = {"params": params, "opt": opt}
         batch = model.input_specs(shape, abstract=True, sharder=sharder)
         return mesh, jax.jit(step_fn, donate_argnums=0), (state, batch)
 

@@ -75,9 +75,9 @@ def rglru_forward(cfg, p, x, sharder, *, h0=None, conv0=None, return_state=False
     if h0 is not None:
         b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
 
-    def combine(l, r):
-        al, bl = l
-        ar, br = r
+    def combine(lhs, rhs):
+        al, bl = lhs
+        ar, br = rhs
         return al * ar, ar * bl + br
 
     _, h = jax.lax.associative_scan(combine, (a, b), axis=1)

@@ -109,7 +109,6 @@ def rwkv_time_mix(cfg, p, x, sharder, *, state=None, shift_prev=None,
     kc = padseq(k).reshape(B, -1, CHUNK, H, N).astype(jnp.float32)
     vc = padseq(v).reshape(B, -1, CHUNK, H, N).astype(jnp.float32)
     wc = padseq(logw).reshape(B, -1, CHUNK, H, N)        # log decays (<=0)
-    n_chunks = S_pad // CHUNK
 
     def chunk_step(carry, inp):
         st = carry                                        # (B,H,N,N) fp32

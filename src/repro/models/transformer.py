@@ -13,18 +13,28 @@ Three entry points per model:
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
 from . import rglru, rwkv6
-from .common import (ParamSpec, apply_norm, apply_rope, attention_specs,
-                     decode_attend, gqa_attend, init_tree, mha, mlp,
-                     mlp_specs, moe_block, moe_specs, norm_specs, rmsnorm,
-                     scan_or_unroll, sinusoidal_pos, stack_tree)
+from .common import (
+    ParamSpec,
+    apply_norm,
+    apply_rope,
+    attention_specs,
+    decode_attend,
+    gqa_attend,
+    mha,
+    mlp,
+    mlp_specs,
+    moe_block,
+    moe_specs,
+    norm_specs,
+    rmsnorm,
+    scan_or_unroll,
+    sinusoidal_pos,
+    stack_tree,
+)
 
 
 # -- per-block specs -----------------------------------------------------------
@@ -174,13 +184,15 @@ def cache_specs(cfg, batch: int, max_seq: int):
         lax = ("layers",) if n else ()
         if kind in ("attn",):
             shape = lead + (batch, max_seq, cfg.n_kv_heads, cfg.hd)
-            return {"k": ParamSpec(shape, lax + ("batch", "kv_seq", "kv_heads", "head_dim"), "zeros"),
-                    "v": ParamSpec(shape, lax + ("batch", "kv_seq", "kv_heads", "head_dim"), "zeros")}
+            kv_axes = lax + ("batch", "kv_seq", "kv_heads", "head_dim")
+            return {"k": ParamSpec(shape, kv_axes, "zeros"),
+                    "v": ParamSpec(shape, kv_axes, "zeros")}
         if kind == "attn_local":
             W = min(cfg.window, max_seq)
             shape = lead + (batch, W, cfg.n_kv_heads, cfg.hd)
-            return {"k": ParamSpec(shape, lax + ("batch", "kv_seq", "kv_heads", "head_dim"), "zeros"),
-                    "v": ParamSpec(shape, lax + ("batch", "kv_seq", "kv_heads", "head_dim"), "zeros"),
+            kv_axes = lax + ("batch", "kv_seq", "kv_heads", "head_dim")
+            return {"k": ParamSpec(shape, kv_axes, "zeros"),
+                    "v": ParamSpec(shape, kv_axes, "zeros"),
                     "pos": ParamSpec(lead + (batch, W), lax + ("batch", None), "zeros")}
         if kind == "rglru":
             return {"h": ParamSpec(lead + (batch, w), lax + ("batch", "lru"), "zeros"),
@@ -188,9 +200,11 @@ def cache_specs(cfg, batch: int, max_seq: int):
                                       lax + ("batch", None, "lru"), "zeros")}
         if kind == "rwkv":
             H, N = cfg.n_heads, cfg.rnn_head_dim
-            return {"s": ParamSpec(lead + (batch, H, N, N), lax + ("batch", None, None, "rnn_state"), "zeros"),
-                    "tm": ParamSpec(lead + (batch, 1, cfg.d_model), lax + ("batch", None, "act_embed"), "zeros"),
-                    "cm": ParamSpec(lead + (batch, 1, cfg.d_model), lax + ("batch", None, "act_embed"), "zeros")}
+            emb_axes = lax + ("batch", None, "act_embed")
+            return {"s": ParamSpec(lead + (batch, H, N, N),
+                                   lax + ("batch", None, None, "rnn_state"), "zeros"),
+                    "tm": ParamSpec(lead + (batch, 1, cfg.d_model), emb_axes, "zeros"),
+                    "cm": ParamSpec(lead + (batch, 1, cfg.d_model), emb_axes, "zeros")}
         raise ValueError(kind)
 
     cache = {"blocks": {f"p{i}_{kind}": one(kind, n_full)

@@ -9,14 +9,22 @@ to the encoder output, with a self-KV + cross-KV cache for decode.
 
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 
-from .common import (ParamSpec, apply_norm, attention_specs, decode_attend,
-                     gqa_attend, mha, mlp, mlp_specs, norm_specs,
-                     scan_or_unroll, sinusoidal_pos, stack_tree)
+from .common import (
+    ParamSpec,
+    apply_norm,
+    attention_specs,
+    decode_attend,
+    mha,
+    mlp,
+    mlp_specs,
+    norm_specs,
+    scan_or_unroll,
+    sinusoidal_pos,
+    stack_tree,
+)
 
 
 def _enc_layer_specs(cfg):
@@ -130,11 +138,6 @@ def prefill(cfg, params, frames, tokens, cache, sharder):
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     h = params["embed"].astype(cd)[tokens]
     h = h + sinusoidal_pos(positions, cfg.d_model).astype(cd)
-
-    self_k = jnp.zeros_like(cache["self_k"])
-    self_v = jnp.zeros_like(cache["self_v"])
-    cross_k = jnp.zeros_like(cache["cross_k"])
-    cross_v = jnp.zeros_like(cache["cross_v"])
 
     def layer(h, xs):
         p, = xs

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from . import transformer, whisper
-from .common import ParamSpec, init_tree
+from .common import init_tree
 
 
 @dataclasses.dataclass

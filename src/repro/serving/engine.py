@@ -7,7 +7,6 @@ scheduler and the SepBIT log-structured KV page store (serving/logkv.py).
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -10,7 +10,6 @@ automatically under pjit.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +46,9 @@ def lr_at(c: AdamWConfig, step):
 
 def init_opt_state(c: AdamWConfig, params):
     dt = jnp.dtype(c.state_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return {
         "m": jax.tree.map(zeros, params),
         "v": jax.tree.map(zeros, params),

@@ -9,12 +9,10 @@ microbatch's reduce-scatter with the next microbatch's backward pass).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from .optimizer import AdamWConfig, adamw_update, global_norm, init_opt_state
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
 
 
 def cross_entropy(logits, labels, ignore_index: int = -1):

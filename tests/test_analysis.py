@@ -1,11 +1,15 @@
 """Closed-form Zipf analysis must reproduce the paper's Fig 8/10 numbers."""
 
-import numpy as np
 import pytest
 
-from repro.core.analysis import (BLOCKS_PER_GIB, fig8a_grid, pr_gc_bit,
-                                 pr_user_bit, trace_conditional_gc,
-                                 trace_conditional_user)
+from repro.core.analysis import (
+    BLOCKS_PER_GIB,
+    fig8a_grid,
+    pr_gc_bit,
+    pr_user_bit,
+    trace_conditional_gc,
+    trace_conditional_user,
+)
 from repro.core.traces import zipf_trace
 
 G = BLOCKS_PER_GIB

@@ -1,9 +1,7 @@
 """Checkpointing: atomicity, hash chain, retention, crash recovery, WA."""
 
-import json
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -25,11 +25,18 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core.fleetshard import (encode_policies, matching_single_config,
-                                   simulate_fleet_hetero)
-from repro.core.jaxsim import (SCHEME_NAMES, SELECTOR_NAMES, JaxSimConfig,
-                               _run, default_policy, fk_annotations,
-                               pad_fleet, simulate_fleet, simulate_jax)
+from repro.core.fleetshard import encode_policies, matching_single_config, simulate_fleet_hetero
+from repro.core.jaxsim import (
+    JaxSimConfig,
+    SCHEME_NAMES,
+    SELECTOR_NAMES,
+    _run,
+    default_policy,
+    fk_annotations,
+    pad_fleet,
+    simulate_fleet,
+    simulate_jax,
+)
 from repro.core.placement import registry
 from repro.core.simulator import simulate
 

@@ -10,8 +10,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.configs import get_config
 from repro.distributed import Sharder, ShardingOptions
 from repro.distributed.collectives import dequantize_int8, quantize_int8
-from repro.distributed.elastic import (MeshPlan, StragglerDetector, plan_mesh,
-                                       reshard_plan)
+from repro.distributed.elastic import StragglerDetector, plan_mesh, reshard_plan
 
 
 class FakeMesh:
@@ -143,7 +142,7 @@ def test_straggler_detector():
         t = times.copy()
         t[3] = 5.0
         assert det.observe(t) == [] or 3 in det.flagged or True
-    newly = det.observe(np.where(np.arange(8) == 3, 5.0, 1.0))
+    det.observe(np.where(np.arange(8) == 3, 5.0, 1.0))
     assert 3 in det.flagged
     assign = det.reassign_shards(16)
     assert 3 not in assign

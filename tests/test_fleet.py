@@ -8,7 +8,7 @@ import pytest
 
 from repro.core.blockstore import INF, Volume
 from repro.core.gc import GCPolicy
-from repro.core.jaxsim import JaxSimConfig, _run, pad_fleet, simulate_fleet, simulate_jax
+from repro.core.jaxsim import JaxSimConfig, _run, simulate_fleet, simulate_jax
 from repro.core.simulator import annotate_next_write, simulate
 from repro.core.tracegen import make_fleet
 from repro.core.traces import shifting_trace, zipf_trace

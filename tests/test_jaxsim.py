@@ -1,6 +1,5 @@
 """JAX lax.scan simulator must match the numpy event loop."""
 
-import numpy as np
 import pytest
 
 from repro.core.jaxsim import JaxSimConfig, simulate_jax

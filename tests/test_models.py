@@ -3,10 +3,9 @@ decode-with-cache vs teacher-forced forward."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, SHAPES, get_config, smoke_config
+from repro.configs import ARCH_IDS, get_config, smoke_config
 from repro.distributed import null_sharder
 from repro.models import build_model
 from repro.training import AdamWConfig, init_train_state, make_train_step

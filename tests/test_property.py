@@ -21,11 +21,11 @@ except ImportError:
             "set — the property suite must not be skipped in this "
             "environment (check requirements-dev.txt installation)")
     pytest.skip("hypothesis not installed", allow_module_level=True)
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.blockstore import INF, Volume
-from repro.core.simulator import annotate_next_write, simulate
-from repro.distributed.collectives import dequantize_int8, quantize_int8
+from repro.core.blockstore import INF  # noqa: E402
+from repro.core.simulator import annotate_next_write, simulate  # noqa: E402
+from repro.distributed.collectives import dequantize_int8, quantize_int8  # noqa: E402
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")

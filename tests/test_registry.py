@@ -1,7 +1,6 @@
 """Placement-registry contract: completeness, id stability, both-backend
 resolution, class-budget invariants, and the sweep-artifact WA ordering."""
 
-import dataclasses
 import json
 import os
 import subprocess
@@ -10,7 +9,7 @@ import sys
 import numpy as np
 import pytest
 
-from repro.core.placement import SCHEMES, Placement, make_placement, registry
+from repro.core.placement import Placement, SCHEMES, make_placement, registry
 from repro.core.simulator import simulate
 from repro.core.traces import zipf_trace
 

@@ -93,8 +93,11 @@ FIXTURES = fixtures.violation_fixtures()
 
 @pytest.mark.parametrize("fx", FIXTURES, ids=[f.name for f in FIXTURES])
 def test_violation_fixtures_flagged_exactly(fx):
-    findings, _ = analysis.analyze_scheme(CFG, fx.name, fx.n_classes,
-                                          fx.impl)
+    if fx.kind == "scheme":
+        findings, _ = analysis.analyze_scheme(CFG, fx.name, fx.n_classes,
+                                              fx.impl)
+    else:
+        findings = analysis.analyze_fleet_fixture(CFG, fx)
     got = frozenset(f.code for f in findings)
     assert got == fx.expect, [str(f) for f in findings]
 
@@ -156,7 +159,19 @@ def test_cli_json_and_selftest(tmp_path):
     assert set(report["schemes"]) == {sd.name for sd, _ in JAX_SCHEMES}
     assert report["schemes"]["dac"]["manifest"]["user_class"]["writes"] == \
         ["sch_dac_region"]
+    assert report["fleet"]["findings"] == []
 
     proc = _run_cli("--selftest")
     assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-800:]
-    assert "6/6 fixtures" in proc.stdout
+    n = len(FIXTURES)
+    assert f"{n}/{n} fixtures" in proc.stdout
+
+
+def test_cli_rejects_unknown_scheme():
+    """--schemes with a name outside the registry is a usage error (exit 2)
+    naming the valid schemes, not a silently empty report."""
+    proc = _run_cli("--schemes", "sepbit,nope", "--no-kernels",
+                    "--no-engine", "--no-fleet")
+    assert proc.returncode == 2, (proc.stdout, proc.stderr)
+    assert "unknown scheme(s): nope" in proc.stderr
+    assert "sepbit" in proc.stderr  # the valid-scheme list is printed

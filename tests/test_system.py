@@ -1,6 +1,5 @@
 """End-to-end behaviour: the paper's headline claims on the synthetic pool."""
 
-import numpy as np
 import pytest
 
 from repro.core.simulator import simulate

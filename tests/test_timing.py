@@ -14,11 +14,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.fleetshard import (encode_policies, matching_single_config,
-                                   simulate_fleet_hetero)
-from repro.core.jaxsim import (GCSCHED_IDS, JaxSimConfig, _run, _summary,
-                               default_policy, hist_quantile, simulate_jax,
-                               state_spec)
+from repro.core.fleetshard import encode_policies, matching_single_config, simulate_fleet_hetero
+from repro.core.jaxsim import (
+    GCSCHED_IDS,
+    JaxSimConfig,
+    _run,
+    _summary,
+    default_policy,
+    hist_quantile,
+    simulate_jax,
+    state_spec,
+)
 
 N, SEG = 96, 8
 BASE = JaxSimConfig(n_lbas=N, segment_size=SEG, timing=True)
