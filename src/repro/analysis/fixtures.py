@@ -94,6 +94,27 @@ def _dtype_drift() -> ViolationFixture:
         JaxPlacement(init_state, user_class, _clean_gc))
 
 
+def _float_decay_precision() -> ViolationFixture:
+    """Runs an EWMA temperature decay in float16 and stores the result back
+    un-recast — the hazard class of the shared-classifier float schemes
+    (sfr/warcip): a 'cheap' half-precision decay step silently drifts the
+    f32 leaf's dtype across the tick (and with it, bit-parity with the
+    numpy reference). With x64 disabled f64 promotion cannot occur, so
+    precision drift in this codebase is always a *narrowing*."""
+
+    def init_state(cfg):
+        return {"sch_vxf16_temp": jnp.zeros(cfg.n_lbas, jnp.float32)}
+
+    def user_class(cfg, st, lba, v, nxt):
+        decayed = st["sch_vxf16_temp"].astype(jnp.float16) * jnp.float16(0.9)
+        return jnp.zeros((), jnp.int32), dict(st, sch_vxf16_temp=decayed)
+
+    return ViolationFixture(
+        "vxf16", "float state keeps its declared precision",
+        frozenset({"SA202"}), 2,
+        JaxPlacement(init_state, user_class, _clean_gc))
+
+
 def _unclamped() -> ViolationFixture:
     """Returns a raw per-LBA counter as the class id (user side) and a
     float class vector (GC side): nothing bounds either to the budget."""
@@ -180,6 +201,7 @@ def _volume_rank_drift() -> ViolationFixture:
 
 def violation_fixtures() -> tuple[ViolationFixture, ...]:
     return (_cross_slice_write(), _foreign_read(), _float_carry(),
-            _dtype_drift(), _unclamped(), _host_callback(),
+            _dtype_drift(), _float_decay_precision(), _unclamped(),
+            _host_callback(),
             _cross_volume_mix(), _fleet_collective(), _aliased_donation(),
             _volume_rank_drift())

@@ -10,13 +10,17 @@ rewrite work is bounded by the segment size and expressed with masked
 scatters (`mode="drop"`).
 
 Schemes come from the placement registry (`core/placement/registry.py`):
-every scheme with a registered JAX triple — nosep / sepgc / sepbit plus the
-ported baselines fk / dac / ml / sfs and the Exp#4 ablations uw / gw — runs
-on this engine. Per-write dispatch is `jax.lax.switch` on the traced
+every registered scheme carries a JAX triple and runs on this engine —
+nosep / sepgc / sepbit, the ported baselines fk / dac / ml / sfs, the Exp#4
+ablations uw / gw, and the shared-classifier temperature schemes eti / mq /
+sfr / fadac / warcip (whose float decay math lives in
+`placement/temperature_shared.py`, executed verbatim by both backends for
+bit parity). Per-write dispatch is `jax.lax.switch` on the traced
 per-volume scheme id over the registered branch stack; each scheme's
 mutable tables (DAC's region ladder, MultiLog's counters, FK's pending-BIT
-table, ...) live in a per-scheme slice of the state pytree (keys
-``sch_<name>_*``), initialized by the registry triple's `init_state`.
+table, WARCIP's rewrite-interval centroids, ...) live in a per-scheme slice
+of the state pytree (keys ``sch_<name>_*``), initialized by the registry
+triple's `init_state`.
 Future-knowledge schemes additionally consume a per-request BIT annotation
 (`fk_annotations`, threaded through the scan alongside the LBA stream).
 Selectors: greedy / cost_benefit. Validated against the numpy simulator in

@@ -13,8 +13,9 @@ from .base import Placement
 from .registry import JaxPlacement, SchemeDef, all_schemes, make_placement, scheme_names
 
 # Deprecated alias: the historical name -> numpy-class mapping, a *snapshot*
-# of the registry taken at import time (a numpy_only scheme registered later
-# will be missing here). Kept for existing callers; use registry.get /
+# of the registry taken at import time (the built-in zoo is fully JAX-ported,
+# but an out-of-tree scheme registered after this import will be missing
+# here). Kept for existing callers; use registry.get /
 # registry.numpy_schemes() for live lookups.
 SCHEMES = registry.numpy_schemes()
 

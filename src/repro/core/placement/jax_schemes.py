@@ -27,11 +27,21 @@ Two families:
     by the ``nxt`` trace annotation (`simulator.annotate_next_write`
     clipped to ``NOBIT``), class = ceil(remaining lifespan / segment size).
 
+* **Shared-classifier** schemes (eti, mq, sfr, fadac, warcip — the float-
+  decay and clustering ladders) evaluate every formula through
+  `.temperature_shared`, the same namespace-agnostic functions the numpy
+  classes call: lazy integer decay for ETI/FADaC, a transcendental-free
+  piecewise-linear log for SFR/WARCIP, all-integer queue levels for MQ.
+  These are *bit-identical* to their numpy references (the conformance
+  suite asserts full scheme-state parity), unlike ``sfs`` below.
+
 All classifiers mirror their numpy counterparts' decision boundaries; the
 float32-vs-float64 hotness arithmetic in ``sfs`` is the one knowingly
 inexact spot (class ties may resolve differently once the quantile bounds
 are live — WA-level agreement is what the differential gate checks against
-numpy; the three JAX engines remain bit-identical to each other).
+numpy; the three JAX engines remain bit-identical to each other; the numpy
+side's >``SFS.reservoir`` refresh subsample — reseeded per refresh — is
+not replicated, the JAX quantile is exact over all seen LBAs).
 """
 
 from __future__ import annotations
@@ -39,6 +49,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import temperature_shared as ts
 from .registry import JaxPlacement, register_jax
 
 NOBIT = 2 ** 30          # int32 "no next write" sentinel (== jaxsim.BIG)
@@ -262,6 +273,143 @@ def _fk() -> JaxPlacement:
     return JaxPlacement(init_state, user_class, gc_classes)
 
 
+# -- eti: per-extent counters, lazy periodic halving ---------------------------
+
+def _eti() -> JaxPlacement:
+    def init_state(cfg):
+        n_ext = -(-cfg.n_lbas // ts.ETI_EXTENT_BLOCKS)
+        return {"sch_eti_count": jnp.zeros(n_ext, jnp.int32),
+                "sch_eti_last": jnp.zeros(n_ext, jnp.int32)}
+
+    def user_class(cfg, st, lba, v, nxt):
+        e = lba // ts.ETI_EXTENT_BLOCKS
+        before = st["t"] // ts.ETI_DECAY_EVERY       # epochs before this write
+        after = (st["t"] + 1) // ts.ETI_DECAY_EVERY  # after its decay tick
+        c_new = ts.eti_fold(st["sch_eti_count"][e],
+                            st["sch_eti_last"][e], before) + 1
+        count = st["sch_eti_count"].at[e].set(c_new)
+        last = st["sch_eti_last"].at[e].set(before)
+        cls = ts.eti_user_class(count, last, after, e)
+        return _i32(cls), dict(st, sch_eti_count=count, sch_eti_last=last)
+
+    def gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
+        return jnp.full(g.shape, 2, jnp.int32), st
+
+    return JaxPlacement(init_state, user_class, gc_classes)
+
+
+# -- mq: log2(freq) queue levels with expiry demotion --------------------------
+
+def _mq() -> JaxPlacement:
+    # life_time is the numpy default (4 * segment_size); the numpy class's
+    # life_time kwarg has no JAX-side counterpart.
+
+    def init_state(cfg):
+        return {"sch_mq_freq": jnp.zeros(cfg.n_lbas, jnp.int32),
+                "sch_mq_level": jnp.zeros(cfg.n_lbas, jnp.int32),
+                "sch_mq_expire": jnp.zeros(cfg.n_lbas, jnp.int32)}
+
+    def user_class(cfg, st, lba, v, nxt):
+        freq = st["sch_mq_freq"].at[lba].add(1)
+        cls, lvl = ts.mq_user(freq[lba], st["sch_mq_level"][lba],
+                              st["sch_mq_expire"][lba], st["t"])
+        level = st["sch_mq_level"].at[lba].set(lvl)
+        expire = st["sch_mq_expire"].at[lba].set(
+            st["t"] + 4 * cfg.segment_size)
+        return _i32(cls), dict(st, sch_mq_freq=freq, sch_mq_level=level,
+                               sch_mq_expire=expire)
+
+    def gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
+        return jnp.full(g.shape, 5, jnp.int32), st
+
+    return JaxPlacement(init_state, user_class, gc_classes)
+
+
+# -- sfr: sequentiality / frequency / recency score ----------------------------
+
+def _sfr() -> JaxPlacement:
+    def init_state(cfg):
+        n_ch = -(-cfg.n_lbas // ts.SFR_CHUNK_BLOCKS)
+        return {"sch_sfr_freq": jnp.zeros(n_ch, jnp.float32),
+                "sch_sfr_last": jnp.full(n_ch, ts.SFR_LAST_INIT, jnp.int32),
+                "sch_sfr_prev": jnp.int32(-2)}
+
+    def user_class(cfg, st, lba, v, nxt):
+        c = lba // ts.SFR_CHUNK_BLOCKS
+        seq_f = (lba == st["sch_sfr_prev"] + 1).astype(jnp.float32)
+        dt = (st["t"] - st["sch_sfr_last"][c]).clip(0, None)
+        f_new = ts.sfr_freq_update(st["sch_sfr_freq"][c])
+        freq = st["sch_sfr_freq"].at[c].set(f_new)
+        last = st["sch_sfr_last"].at[c].set(st["t"])
+        cls = ts.sfr_class(ts.sfr_score(f_new, dt, seq_f))
+        return _i32(cls), dict(st, sch_sfr_freq=freq, sch_sfr_last=last,
+                               sch_sfr_prev=lba.astype(jnp.int32))
+
+    def gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
+        return jnp.full(g.shape, 5, jnp.int32), st
+
+    return JaxPlacement(init_state, user_class, gc_classes)
+
+
+# -- fadac: fading counters, lazy half-life decay ------------------------------
+
+def _fadac() -> JaxPlacement:
+    def init_state(cfg):
+        n_ch = -(-cfg.n_lbas // ts.FADAC_CHUNK_BLOCKS)
+        return {"sch_fadac_count": jnp.zeros(n_ch, jnp.int32),
+                "sch_fadac_last": jnp.zeros(n_ch, jnp.int32)}
+
+    def user_class(cfg, st, lba, v, nxt):
+        c = lba // ts.FADAC_CHUNK_BLOCKS
+        cnt = ts.fadac_fold(st["sch_fadac_count"][c],
+                            st["sch_fadac_last"][c], st["t"]) + 1
+        count = st["sch_fadac_count"].at[c].set(cnt)
+        last = st["sch_fadac_last"].at[c].set(st["t"])
+        return _i32(ts.fadac_class(cnt)), dict(st, sch_fadac_count=count,
+                                               sch_fadac_last=last)
+
+    def gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
+        # read-only folds; dead slots gather stale (in-range) chunk ids
+        # harmlessly — their classes are masked downstream
+        cs = lba_v // ts.FADAC_CHUNK_BLOCKS
+        temps = ts.fadac_fold(st["sch_fadac_count"][cs],
+                              st["sch_fadac_last"][cs], st["t"])
+        return _i32(ts.fadac_class(temps)), st
+
+    return JaxPlacement(init_state, user_class, gc_classes)
+
+
+# -- warcip: online k-means over log rewrite intervals -------------------------
+
+def _warcip() -> JaxPlacement:
+    k = len(ts.WARCIP_CENTROID_INIT)
+
+    def init_state(cfg):
+        return {"sch_warcip_last": jnp.full(cfg.n_lbas, -1, jnp.int32),
+                "sch_warcip_cent": jnp.asarray(ts.WARCIP_CENTROID_INIT,
+                                               jnp.float32),
+                "sch_warcip_cnt": jnp.ones(k, jnp.float32)}
+
+    def user_class(cfg, st, lba, v, nxt):
+        last_prev = st["sch_warcip_last"][lba]
+        known = last_prev >= 0
+        li = ts.warcip_interval(st["t"] - last_prev)
+        cent, cnt = st["sch_warcip_cent"], st["sch_warcip_cnt"]
+        j = _i32(ts.warcip_assign(cent, li))
+        new_c, new_n = ts.warcip_update(cent[j], cnt[j], li)
+        cent = cent.at[j].set(jnp.where(known, new_c, cent[j]))
+        cnt = cnt.at[j].set(jnp.where(known, new_n, cnt[j]))
+        last = st["sch_warcip_last"].at[lba].set(st["t"])
+        cls = jnp.where(known, j, 4).clip(0, 5)
+        return _i32(cls), dict(st, sch_warcip_last=last,
+                               sch_warcip_cent=cent, sch_warcip_cnt=cnt)
+
+    def gc_classes(cfg, st, victim_cls, lba_v, utime_v, valid_v, g):
+        return jnp.full(g.shape, 5, jnp.int32), st
+
+    return JaxPlacement(init_state, user_class, gc_classes)
+
+
 # -- registration (order fixes the dense scheme-id table) ----------------------
 
 register_jax("nosep", _from_elementwise(_ew_nosep))
@@ -273,3 +421,8 @@ register_jax("ml", _ml())
 register_jax("sfs", _sfs())
 register_jax("uw", _from_elementwise(_ew_uw))
 register_jax("gw", _from_elementwise(_ew_gw))
+register_jax("eti", _eti())
+register_jax("mq", _mq())
+register_jax("sfr", _sfr())
+register_jax("fadac", _fadac())
+register_jax("warcip", _warcip())

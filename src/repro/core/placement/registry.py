@@ -284,8 +284,6 @@ from .temperature import (  # noqa: E402
 )
 
 for _cls in (NoSep, SepGC, SepBIT, FK, DAC, MultiLog, SFS, SepBIT_UW,
-             SepBIT_GW):
+             SepBIT_GW, ETI, MQ, SFR, FADaC, WARCIP):
     register(_cls)
-for _cls in (ETI, MQ, SFR, FADaC, WARCIP):
-    register(_cls, numpy_only=True)   # stateful float-decay/clustering ladders
 del _cls

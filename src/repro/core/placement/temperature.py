@@ -6,15 +6,20 @@ the class budgets from §4.1: DAC/SFS/ML/FADaC use all 6 classes for all
 blocks; ETI uses 2 user + 1 GC; MQ/SFR/WARCIP use 5 user + 1 GC. Knobs follow
 the original papers' defaults where those transfer to a unit-free simulator;
 deviations are noted per class.
+
+The stateful float-decay / clustering ladders (ETI, MQ, SFR, FADaC, WARCIP)
+delegate every classification formula to `.temperature_shared`, which the
+JAX triples in `.jax_schemes` call verbatim — that shared module is what
+makes the two backends bit-identical under the differential gate (see its
+docstring for the lazy-decay and transcendental-free reformulations, which
+are deliberate *shared* deviations from the eager float originals).
 """
 
 from __future__ import annotations
 
-import math
-
 import numpy as np
 
-from ..blockstore import INF
+from . import temperature_shared as shared
 from .base import Placement
 
 
@@ -72,12 +77,15 @@ class SFS(Placement):
     name = "sfs"
     n_classes = 6
 
+    reservoir = 65536  # refresh samples at most this many seen LBAs
+
     def __init__(self, n_lbas, segment_size, resample_every: int = 4096):
         super().__init__(n_lbas, segment_size)
         self.count = np.zeros(n_lbas, dtype=np.int64)
         self.first = np.full(n_lbas, -1, dtype=np.int64)
         self.resample_every = resample_every
         self._since = 0
+        self._refresh_count = 0
         self._bounds = None  # hotness quantile boundaries (n_classes-1,)
 
     def _hotness(self, lbas, t):
@@ -88,8 +96,12 @@ class SFS(Placement):
         seen = np.flatnonzero(self.first >= 0)
         if len(seen) < self.n_classes:
             return
-        if len(seen) > 65536:
-            seen = np.random.default_rng(0).choice(seen, 65536, replace=False)
+        # each refresh draws a fresh reservoir — a constant seed would pin
+        # every resample to the same subset as the LBA population shifts
+        self._refresh_count += 1
+        if len(seen) > self.reservoir:
+            rng = np.random.default_rng(self._refresh_count)
+            seen = rng.choice(seen, self.reservoir, replace=False)
         h = self._hotness(seen, vol.t)
         qs = np.linspace(0, 1, self.n_classes + 1)[1:-1]
         self._bounds = np.quantile(h, qs)
@@ -117,31 +129,31 @@ class SFS(Placement):
 
 class ETI(Placement):
     """Extent-based temperature identification [27]: per-extent write counters
-    with periodic decay; hot/cold split of user writes + one GC class."""
+    with periodic decay; hot/cold split of user writes + one GC class.
+
+    Decay is lazy: counters carry ``(count, last_epoch)`` and are folded
+    forward by integer halvings at read time (`temperature_shared.eti_fold`)
+    — the decay epoch advances every ``decay_every`` writes, exactly where
+    the eager ``temp *= 0.5`` fired (increment, then tick, then classify)."""
 
     name = "eti"
     n_classes = 3
-    extent_blocks = 256
-    decay_every = 1 << 15
+    extent_blocks = shared.ETI_EXTENT_BLOCKS
+    decay_every = shared.ETI_DECAY_EVERY
 
     def __init__(self, n_lbas, segment_size):
         super().__init__(n_lbas, segment_size)
         n_ext = (n_lbas + self.extent_blocks - 1) // self.extent_blocks
-        self.temp = np.zeros(n_ext, dtype=np.float64)
-        self._since = 0
-
-    def _tick(self):
-        self._since += 1
-        if self._since >= self.decay_every:
-            self._since = 0
-            self.temp *= 0.5
+        self.count = np.zeros(n_ext, dtype=np.int32)
+        self.last = np.zeros(n_ext, dtype=np.int32)  # epoch of last fold
 
     def on_user_write(self, vol, lba, v):
-        e = lba // self.extent_blocks
-        self.temp[e] += 1
-        self._tick()
-        hot = self.temp[e] > max(np.mean(self.temp), 1.0)
-        return 0 if hot else 1
+        e = np.int32(lba // self.extent_blocks)
+        before = np.int32(vol.t // self.decay_every)        # epochs so far
+        after = np.int32((vol.t + 1) // self.decay_every)   # after this tick
+        self.count[e] = shared.eti_fold(self.count[e], self.last[e], before) + 1
+        self.last[e] = before
+        return int(shared.eti_user_class(self.count, self.last, after, e))
 
     def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
         return np.full(len(lbas), 2, dtype=np.int64)
@@ -157,19 +169,18 @@ class MQ(Placement):
 
     def __init__(self, n_lbas, segment_size, life_time: int | None = None):
         super().__init__(n_lbas, segment_size)
-        self.freq = np.zeros(n_lbas, dtype=np.int64)
-        self.level = np.zeros(n_lbas, dtype=np.int64)
-        self.expire = np.zeros(n_lbas, dtype=np.int64)
+        self.freq = np.zeros(n_lbas, dtype=np.int32)
+        self.level = np.zeros(n_lbas, dtype=np.int32)
+        self.expire = np.zeros(n_lbas, dtype=np.int32)
         self.life_time = life_time or 4 * segment_size
 
     def on_user_write(self, vol, lba, v):
-        if vol.t > self.expire[lba] and self.level[lba] > 0:
-            self.level[lba] -= 1  # expiry demotion
         self.freq[lba] += 1
-        lvl = min(int(self.freq[lba]).bit_length() - 1, self.user_classes - 1)
-        self.level[lba] = max(lvl, self.level[lba])
+        cls, lvl = shared.mq_user(self.freq[lba], self.level[lba],
+                                  self.expire[lba], np.int32(vol.t))
+        self.level[lba] = lvl
         self.expire[lba] = vol.t + self.life_time
-        return self.user_classes - 1 - int(self.level[lba])
+        return int(cls)
 
     def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
         return np.full(len(lbas), self.n_classes - 1, dtype=np.int64)
@@ -177,30 +188,31 @@ class MQ(Placement):
 
 class SFR(Placement):
     """AutoStream SFR [35]: score from Sequentiality, Frequency, Recency per
-    chunk; scores are bucketed into 5 user classes + 1 GC class."""
+    chunk; scores are bucketed into 5 user classes + 1 GC class. Recency uses
+    the shared piecewise-linear log (`temperature_shared.log2_interp`) in
+    place of ``log1p``."""
 
     name = "sfr"
     n_classes = 6
     user_classes = 5
-    chunk_blocks = 64
+    chunk_blocks = shared.SFR_CHUNK_BLOCKS
 
     def __init__(self, n_lbas, segment_size):
         super().__init__(n_lbas, segment_size)
         n_ch = (n_lbas + self.chunk_blocks - 1) // self.chunk_blocks
-        self.freq = np.zeros(n_ch, dtype=np.float64)
-        self.last = np.full(n_ch, -INF, dtype=np.int64)
+        self.freq = np.zeros(n_ch, dtype=np.float32)
+        self.last = np.full(n_ch, shared.SFR_LAST_INIT, dtype=np.int32)
         self.prev_lba = -2
 
     def on_user_write(self, vol, lba, v):
         c = lba // self.chunk_blocks
-        seq = 1.0 if lba == self.prev_lba + 1 else 0.0
+        seq_f = np.float32(lba == self.prev_lba + 1)
         self.prev_lba = lba
-        rec = 1.0 / (1.0 + math.log1p(max(vol.t - self.last[c], 0)))
-        self.freq[c] = 0.9 * self.freq[c] + 1.0
+        dt = (np.int32(vol.t) - self.last[c]).clip(0, None)  # pre-update last
+        self.freq[c] = shared.sfr_freq_update(self.freq[c])
         self.last[c] = vol.t
-        score = 0.4 * min(self.freq[c] / 16.0, 1.0) + 0.4 * rec + 0.2 * (1.0 - seq)
-        cls = int(min(score * self.user_classes, self.user_classes - 1))
-        return self.user_classes - 1 - cls
+        score = shared.sfr_score(self.freq[c], dt, seq_f)
+        return int(shared.sfr_class(score))
 
     def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
         return np.full(len(lbas), self.n_classes - 1, dtype=np.int64)
@@ -208,45 +220,42 @@ class SFR(Placement):
 
 class FADaC(Placement):
     """FADaC [16]: fading (exponentially decayed) per-chunk write counters;
-    class by decayed-temperature ladder. Uses all 6 classes."""
+    class by decayed-temperature ladder. Uses all 6 classes.
+
+    The exponential fade is lazy and quantized: counters are integer
+    ``(count, last_update)`` pairs halved once per *whole* half-life elapsed
+    since their last update (`temperature_shared.fadac_fold`)."""
 
     name = "fadac"
     n_classes = 6
-    chunk_blocks = 64
-    half_life = 1 << 16
+    chunk_blocks = shared.FADAC_CHUNK_BLOCKS
+    half_life = shared.FADAC_HALF_LIFE
 
     def __init__(self, n_lbas, segment_size):
         super().__init__(n_lbas, segment_size)
         n_ch = (n_lbas + self.chunk_blocks - 1) // self.chunk_blocks
-        self.temp = np.zeros(n_ch, dtype=np.float64)
-        self.last = np.zeros(n_ch, dtype=np.int64)
-        self._lam = math.log(2.0) / self.half_life
-
-    def _decayed(self, c, t):
-        return self.temp[c] * math.exp(-self._lam * max(t - self.last[c], 0))
-
-    def _cls(self, temp_now):
-        lvl = min(int(math.log2(1.0 + temp_now)), self.n_classes - 1)
-        return self.n_classes - 1 - lvl
+        self.count = np.zeros(n_ch, dtype=np.int32)
+        self.last = np.zeros(n_ch, dtype=np.int32)
 
     def on_user_write(self, vol, lba, v):
         c = lba // self.chunk_blocks
-        self.temp[c] = self._decayed(c, vol.t) + 1.0
+        cnt = shared.fadac_fold(self.count[c], self.last[c],
+                                np.int32(vol.t)) + 1
+        self.count[c] = cnt
         self.last[c] = vol.t
-        return self._cls(self.temp[c])
+        return int(shared.fadac_class(cnt))
 
     def gc_write_classes(self, vol, seg, lbas, utimes, from_gc):
         cs = lbas // self.chunk_blocks
-        dt = np.maximum(vol.t - self.last[cs], 0)
-        temps = self.temp[cs] * np.exp(-self._lam * dt)
-        lvl = np.minimum(np.log2(1.0 + temps).astype(np.int64), self.n_classes - 1)
-        return self.n_classes - 1 - lvl
+        temps = shared.fadac_fold(self.count[cs], self.last[cs],
+                                  np.int32(vol.t))
+        return shared.fadac_class(temps).astype(np.int64)
 
 
 class WARCIP(Placement):
     """WARCIP [36]: online k-means clustering of per-LBA rewrite intervals
-    (log-scale); each cluster gets its own open segment. 5 user clusters +
-    1 GC class."""
+    (log-scale, via the shared piecewise-linear log); each cluster gets its
+    own open segment. 5 user clusters + 1 GC class."""
 
     name = "warcip"
     n_classes = 6
@@ -254,19 +263,20 @@ class WARCIP(Placement):
 
     def __init__(self, n_lbas, segment_size):
         super().__init__(n_lbas, segment_size)
-        self.last = np.full(n_lbas, -1, dtype=np.int64)
+        self.last = np.full(n_lbas, -1, dtype=np.int32)
         # log-interval centroids, spread over a plausible dynamic range
-        self.centroids = np.linspace(2.0, 18.0, self.user_classes)
-        self.counts = np.ones(self.user_classes)
+        self.centroids = np.asarray(shared.WARCIP_CENTROID_INIT, np.float32)
+        self.counts = np.ones(len(shared.WARCIP_CENTROID_INIT), np.float32)
 
     def on_user_write(self, vol, lba, v):
         if self.last[lba] < 0:
             cls = self.user_classes - 1  # unknown interval -> coldest
         else:
-            li = math.log2(max(vol.t - self.last[lba], 1) + 1)
-            j = int(np.argmin(np.abs(self.centroids - li)))
-            self.counts[j] += 1
-            self.centroids[j] += (li - self.centroids[j]) / min(self.counts[j], 1024)
+            dt = np.int32(vol.t) - self.last[lba]
+            li = shared.warcip_interval(dt)
+            j = int(shared.warcip_assign(self.centroids, li))
+            self.centroids[j], self.counts[j] = shared.warcip_update(
+                self.centroids[j], self.counts[j], li)
             cls = j
         self.last[lba] = vol.t
         return cls

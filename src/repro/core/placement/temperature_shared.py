@@ -1,0 +1,181 @@
+"""Backend-shared classifiers for the stateful temperature schemes.
+
+The five float-decay / clustering ladders (eti, mq, sfr, fadac, warcip) run
+on both backends — the numpy reference event loop and the JAX fleet engine —
+and the differential gate requires their *classes* to agree exactly. Floats
+make that fragile: transcendentals (``log``, ``exp``) and reduction order are
+the two places numpy and XLA may legitimately round differently. This module
+removes both:
+
+* **Lazy integer decay.** ETI's periodic halving and FADaC's exponential
+  fade are carried as integer ``(count, last_update)`` pairs and evaluated
+  at read time by a right-shift with a clipped delta (:func:`eti_fold`,
+  :func:`fadac_fold`). Shifts compose exactly, so decay-at-read equals
+  eager decay — and is identical on both backends by construction. (ETI
+  thereby floors instead of halving fractionally, and FADaC quantizes decay
+  to whole half-lives measured from the last update; both deviations are
+  *shared*, which is what the bitwise gate needs.)
+* **Transcendental-free logs.** ``log2`` is replaced by the exact integer
+  ``floor(log2)`` comparison ladder (:func:`ilog2`) plus a piecewise-linear
+  interpolation (:func:`log2_interp`) built only from exactly-rounded f32
+  ops (add / subtract / divide-by-power-of-two), and ``ln x`` by
+  ``LN2 * log2_interp(x)``.
+* **One source for every constant and formula.** Both backends call these
+  functions verbatim; the numpy classes in `.temperature` pass numpy scalars
+  / arrays, the JAX triples in `.jax_schemes` pass traced arrays. Every
+  function here therefore uses only Python operators and array *methods*
+  (``+ - * / >> << >= > == & abs .clip .astype .argmin .sum``) that numpy
+  and ``jax.numpy`` implement identically, and wraps float literals as
+  ``np.float32`` so no op ever runs at float64.
+
+All basic f32 arithmetic (add, sub, mul, div) is IEEE-754 exact-rounded in
+both numpy and XLA CPU/TPU, so identical op sequences give identical bits;
+additions are written left-associatively and integer reductions (which are
+associative, hence order-free) replace float ones.
+
+Static-analyzer compatibility (docs/static_analysis.md): every classifier
+ends in a ``.clip`` with *literal* bounds (SA301 interval-provable ⊆
+``[0, n_classes)``), every float→int cast is clipped to literal bounds first
+(SA201), and levels are comparison-sum ladders rather than bit tricks so the
+interval pass keeps bounds through them.
+
+This module imports numpy only — the numpy-only simulator path stays free of
+the ``jax`` import.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+F32 = np.float32
+I32 = np.int32
+LN2 = np.float32(0.6931471805599453)
+
+# Scheme knobs (single source for both backends; the numpy classes mirror
+# them as class attributes for introspection/tests).
+ETI_EXTENT_BLOCKS = 256
+ETI_DECAY_EVERY = 1 << 15
+MQ_USER_CLASSES = 5
+SFR_CHUNK_BLOCKS = 64
+SFR_LAST_INIT = -(2 ** 30)        # "never written" chunk timestamp
+FADAC_CHUNK_BLOCKS = 64
+FADAC_HALF_LIFE = 1 << 16
+WARCIP_CENTROID_INIT = (2.0, 6.0, 10.0, 14.0, 18.0)   # == linspace(2, 18, 5)
+WARCIP_COUNT_CAP = 1024.0
+
+
+def ilog2(x):
+    """``floor(log2(x))`` for integer ``x >= 1`` (up to ``2**31 - 1``) as a
+    comparison-sum ladder — exact, and interval-bounded for the analyzer."""
+    f = (x >= 2).astype(I32)
+    for k in range(2, 31):
+        f = f + (x >= (1 << k)).astype(I32)
+    return f
+
+
+def log2_interp(x):
+    """Piecewise-linear ``log2(x)`` for integer ``x >= 1``: exact at powers
+    of two, linear in between (``f + x/2^f - 1``). The division is by a
+    power of two, hence exact; the int→f32 converts round identically on
+    both backends."""
+    f = ilog2(x)
+    pow2 = ((x * 0 + 1) << f).astype(F32)      # backend-agnostic 2**f
+    return f.astype(F32) + x.astype(F32) / pow2 - F32(1.0)
+
+
+# -- eti: per-extent counters, periodic halving --------------------------------
+
+def eti_fold(count, last_epoch, epoch):
+    """Bring a lazily-decayed counter forward to ``epoch`` (one halving —
+    integer floor — per elapsed decay epoch)."""
+    return count >> (epoch - last_epoch).clip(0, 31)
+
+
+def eti_user_class(counts, last_epochs, epoch, e):
+    """Hot/cold user class for extent ``e`` given all per-extent counters.
+
+    The mean is an integer sum (associative — no reduction-order hazard)
+    converted once to f32; "hot" is a strict compare against
+    ``max(mean, 1)``, exactly as the eager original."""
+    temps = eti_fold(counts, last_epochs, epoch)
+    mean = temps.sum().astype(F32) / F32(temps.shape[0])
+    thr = mean.clip(F32(1.0), None)
+    hot = (temps[e].astype(F32) > thr).astype(I32)
+    return (1 - hot).clip(0, 2)
+
+
+# -- mq: log2(freq) queue levels with expiry demotion --------------------------
+
+def mq_ladder(freq):
+    """``min(bit_length(freq) - 1, 4)`` for ``freq >= 1``, as comparisons."""
+    lvl = (freq >= 2).astype(I32)
+    for k in (2, 3, 4):
+        lvl = lvl + (freq >= (1 << k)).astype(I32)
+    return lvl
+
+
+def mq_user(freq_new, level_prev, expire_prev, t):
+    """Class + new queue level for one user write (``freq_new`` already
+    incremented). Expiry (strictly past ``expire_prev``) demotes one level
+    before the frequency ladder re-promotes."""
+    demote = ((t > expire_prev) & (level_prev > 0)).astype(I32)
+    lvl = mq_ladder(freq_new).clip(level_prev - demote, None)
+    cls = (4 - lvl).clip(0, 5)
+    return cls, lvl
+
+
+# -- sfr: sequentiality / frequency / recency score ----------------------------
+
+def sfr_freq_update(freq):
+    """Per-chunk EWMA frequency: ``0.9 * freq + 1``."""
+    return F32(0.9) * freq + F32(1.0)
+
+
+def sfr_score(freq, dt, seq_f):
+    """SFR score from the *updated* frequency, the pre-update recency delta
+    ``dt = max(t - last, 0)``, and sequentiality as f32 0/1."""
+    ln = LN2 * log2_interp(dt + 1)
+    rec = F32(1.0) / (F32(1.0) + ln)
+    fnorm = (freq / F32(16.0)).clip(None, F32(1.0))
+    return F32(0.4) * fnorm + F32(0.4) * rec + F32(0.2) * (F32(1.0) - seq_f)
+
+
+def sfr_class(score):
+    """Bucket a non-negative score into user classes 4 (cold) … 0 (hot)."""
+    lvl = (score * F32(5.0)).clip(F32(0.0), F32(4.0)).astype(I32)
+    return (4 - lvl).clip(0, 5)
+
+
+# -- fadac: fading counters, lazy half-life decay ------------------------------
+
+def fadac_fold(count, last, now, half_life=FADAC_HALF_LIFE):
+    """Decay-at-read: one halving per *whole* half-life elapsed since the
+    counter's last update."""
+    return count >> ((now - last).clip(0, None) // half_life).clip(0, 31)
+
+
+def fadac_class(temp):
+    """``5 - min(floor(log2(1 + temp)), 5)`` via thresholds 1,3,7,15,31."""
+    lvl = (temp >= 1).astype(I32)
+    for thr in (3, 7, 15, 31):
+        lvl = lvl + (temp >= thr).astype(I32)
+    return (5 - lvl).clip(0, 5)
+
+
+# -- warcip: online k-means over log rewrite intervals -------------------------
+
+def warcip_interval(dt):
+    """Log-scale rewrite interval ``log2(max(dt, 1) + 1)``."""
+    return log2_interp(dt.clip(1, None) + 1)
+
+
+def warcip_assign(centroids, li):
+    """Nearest centroid (first-minimum tie-break on both backends)."""
+    return abs(centroids - li).argmin()
+
+
+def warcip_update(cent_j, cnt_j, li):
+    """Online k-means step for the assigned centroid; the count increments
+    *before* the capped divisor. Returns ``(new_centroid, new_count)``."""
+    c2 = cnt_j + F32(1.0)
+    return cent_j + (li - cent_j) / c2.clip(None, F32(WARCIP_COUNT_CAP)), c2

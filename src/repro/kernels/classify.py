@@ -11,8 +11,9 @@ sepgc, sepbit and the Exp#4 ablations uw/gw) is compiled into one select
 chain keyed on the *runtime* scheme-id scalar — heterogeneous fleets vmap
 this kernel with a different scheme per volume, so the choice cannot be
 baked into the compiled kernel. Registering a new elementwise scheme lands
-it here automatically; stateful schemes (dac/ml/sfs/fk) classify via their
-jnp branch in `jaxsim._gc_class_dispatch` and never consult this kernel.
+it here automatically; stateful schemes (fk/dac/ml/sfs and the
+shared-classifier ports eti/mq/sfr/fadac/warcip) classify via their jnp
+branch in `jaxsim._gc_class_dispatch` and never consult this kernel.
 
 Inputs: v (predecessor lifespan), g (age), from_c1 / is_gc flags, and the
 scalar ell; elementwise over (8,128)-tiled int32 blocks on the VPU.

@@ -30,7 +30,7 @@ def classify_ref(v, g, from_c1, is_gc, ell, *, scheme_id=None):
     generated from) so kernel tests compare against a second derivation of
     §4.1's class maps, not the kernel's own source. scheme_id None = SepBIT;
     ids follow the registry's dense order (nosep 0, sepgc 1, sepbit 2,
-    uw 7, gw 8 — the stateful ids 3-6 never reach the kernel)."""
+    uw 7, gw 8 — the stateful ids 3-6 and 9-13 never reach the kernel)."""
     v = v.astype(jnp.float32)
     g = g.astype(jnp.float32)
     user_cls = jnp.where(v < ell, 0, 1)

@@ -1,0 +1,326 @@
+"""Cross-backend conformance suite for the registry zoo.
+
+The differential harness (tests/test_differential.py) is the standing
+engine-level gate; this suite closes the loop on the *scheme* level for the
+shared-classifier ports (eti / mq / sfr / fadac / warcip):
+
+* a completeness gate — every registered scheme must carry a JAX triple, so
+  a future scheme landing without a port fails loudly here;
+* full-simulation lockstep — in a GC-free regime the numpy event loop and
+  `simulate_jax` advance write for write, so per-class counters must agree
+  for **every** scheme (auto-parametrized over the registry × trace family)
+  and the five shared-classifier schemes must additionally end with
+  bit-identical ``sch_<name>_*`` state;
+* driven-sequence parity — the numpy Placement and the JAX triple are fed
+  the same synthetic write/GC-classify sequence directly (no engines in the
+  loop), asserting per-step class equality and final-state bitwise equality
+  including the GC path;
+* engine cross-checks with GC active — single jax ↔ fleet-of-1 ↔
+  hetero-fleet-of-1, bitwise, per new scheme × selector;
+* decay-boundary unit tests — ETI at the 2^15 halving tick, FADaC at
+  exactly ``half_life``, MQ expiry demotion, WARCIP's first-write unknown
+  interval, SFR's sequentiality reset.
+"""
+
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.fleetshard import encode_policies, simulate_fleet_hetero
+from repro.core.jaxsim import (
+    SCHEME_NAMES,
+    SELECTOR_NAMES,
+    JaxSimConfig,
+    _run,
+    simulate_fleet,
+    simulate_jax,
+)
+from repro.core.placement import registry, temperature_shared as ts
+from repro.core.simulator import simulate
+from repro.core.tracegen import make_fleet
+
+N = 96
+SEG = 8
+NEW_SCHEMES = ("eti", "mq", "sfr", "fadac", "warcip")
+TRACE_FAMILIES = ("zipf_mixture", "shifting_hotspot")
+
+# numpy attribute -> jax state-slice key, per shared-classifier scheme
+STATE_MAP = {
+    "eti": {"count": "sch_eti_count", "last": "sch_eti_last"},
+    "mq": {"freq": "sch_mq_freq", "level": "sch_mq_level",
+           "expire": "sch_mq_expire"},
+    "sfr": {"freq": "sch_sfr_freq", "last": "sch_sfr_last"},
+    "fadac": {"count": "sch_fadac_count", "last": "sch_fadac_last"},
+    "warcip": {"last": "sch_warcip_last", "centroids": "sch_warcip_cent",
+               "counts": "sch_warcip_cnt"},
+}
+
+
+def test_zoo_is_complete():
+    """Every registered scheme has a JAX triple — the sweep grid and the
+    paper's baseline comparison run with no numpy fallback. A new scheme
+    registered without a port (or with a numpy_only escape) fails here."""
+    jax_names = {sd.name for sd, _ in registry.jax_schemes()}
+    missing = [sd.name for sd in registry.all_schemes()
+               if sd.name not in jax_names]
+    assert not missing, (
+        f"scheme(s) {missing} have no JAX port — the registry zoo must stay "
+        "complete (see docs/placement_api.md, 'porting a stateful float "
+        "scheme')")
+    assert set(NEW_SCHEMES) <= set(SCHEME_NAMES)
+
+
+def _capture_placement(scheme):
+    """Context: wrap the scheme's numpy class __init__ so the instance that
+    `simulate` builds internally is observable afterwards."""
+    cls = registry.get(scheme).numpy_cls
+    cap = []
+    orig = cls.__init__
+
+    def recording(self, *a, **kw):
+        orig(self, *a, **kw)
+        cap.append(self)
+
+    return cls, orig, recording, cap
+
+
+@pytest.mark.parametrize("family", TRACE_FAMILIES)
+@pytest.mark.parametrize("scheme", SCHEME_NAMES)
+def test_numpy_jax_lockstep_without_gc(scheme, family):
+    """With the GP threshold above the trace's steady-state garbage level,
+    GC never fires in either backend, so the two event loops are in strict
+    lockstep: identical WA (== 1.0) and identical per-class user-write
+    counters for every scheme; the shared-classifier schemes additionally
+    finish with bit-identical state tables."""
+    tr = np.asarray(make_fleet(family, 1, N, 2 * N, jitter=0.2, seed=5)[0],
+                    np.int32)
+    cfg = JaxSimConfig(n_lbas=N, segment_size=SEG, scheme=scheme,
+                       gp_threshold=0.95)
+    r_jx = simulate_jax(tr, cfg)
+    cls_np, orig, recording, cap = _capture_placement(scheme)
+    cls_np.__init__ = recording
+    try:
+        r_np = simulate(tr, scheme, segment_size=SEG, n_lbas=N,
+                        gp_threshold=0.95)
+    finally:
+        cls_np.__init__ = orig
+    assert r_jx["wa"] == r_np.wa == 1.0          # the no-GC premise
+    cu_j, cu_n = list(r_jx["class_user_writes"]), list(r_np.class_user_writes)
+    assert cu_j[:len(cu_n)] == cu_n
+    assert sum(cu_j[len(cu_n):]) == 0
+    if scheme in STATE_MAP:
+        st = jax.device_get(_run(cfg, tr))
+        placement = cap[0]
+        for attr, key in STATE_MAP[scheme].items():
+            np.testing.assert_array_equal(
+                getattr(placement, attr), np.asarray(st[key]),
+                err_msg=f"{scheme}.{attr} diverged from state[{key}]")
+        if scheme == "sfr":
+            assert int(st["sch_sfr_prev"]) == placement.prev_lba
+
+
+def _drive_pair(scheme, events):
+    """Feed the numpy Placement and the JAX triple one identical event
+    sequence. ``events`` yields ("user", t, lba) or ("gc", t, lbas, utimes);
+    returns (numpy classes, jax classes, placement, final jax state)."""
+    import jax.numpy as jnp
+    placement = registry.get(scheme).numpy_cls(N, SEG)
+    impl = dict((sd.name, jp) for sd, jp in registry.jax_schemes())[scheme]
+    cfg = types.SimpleNamespace(n_lbas=N, segment_size=SEG)
+    st = {"t": jnp.int32(0), **impl.init_state(cfg)}
+    out_np, out_jx = [], []
+    for ev in events:
+        if ev[0] == "user":
+            _, t, lba = ev
+            vol = types.SimpleNamespace(t=t)
+            out_np.append(int(placement.on_user_write(vol, lba, 0)))
+            st["t"] = jnp.int32(t)
+            cls, st = impl.user_class(cfg, st, jnp.int32(lba),
+                                      jnp.int32(0), jnp.int32(2 ** 30))
+            out_jx.append(int(cls))
+        else:
+            _, t, lbas, utimes = ev
+            vol = types.SimpleNamespace(t=t)
+            out_np.extend(int(c) for c in placement.gc_write_classes(
+                vol, None, np.asarray(lbas), np.asarray(utimes), False))
+            st["t"] = jnp.int32(t)
+            lv = jnp.asarray(lbas, jnp.int32)
+            uv = jnp.asarray(utimes, jnp.int32)
+            cls, st = impl.gc_classes(cfg, st, jnp.int32(0), lv, uv,
+                                      jnp.ones(lv.shape, bool),
+                                      jnp.int32(t) - uv)
+            out_jx.extend(int(c) for c in cls)
+    return out_np, out_jx, placement, jax.device_get(st)
+
+
+@pytest.mark.parametrize("scheme", NEW_SCHEMES)
+def test_driven_sequence_full_parity(scheme):
+    """Scheme-level conformance with the GC path in the loop: an identical
+    synthetic sequence of user writes and GC classifications produces the
+    same class at every step and bit-identical final state tables."""
+    rng = np.random.default_rng(17)
+    events, t = [], 0
+    for step in range(400):
+        t += int(rng.integers(1, 40))
+        if step % 11 == 10:
+            lbas = rng.integers(0, N, size=SEG)
+            utimes = np.maximum(t - rng.integers(0, 200, size=SEG), 0)
+            events.append(("gc", t, lbas, utimes))
+        else:
+            events.append(("user", t, int(rng.integers(0, N))))
+    out_np, out_jx, placement, st = _drive_pair(scheme, events)
+    assert out_np == out_jx
+    for attr, key in STATE_MAP[scheme].items():
+        np.testing.assert_array_equal(
+            getattr(placement, attr), np.asarray(st[key]),
+            err_msg=f"{scheme}.{attr} diverged from state[{key}]")
+
+
+@pytest.mark.parametrize("selector", SELECTOR_NAMES)
+@pytest.mark.parametrize("scheme", NEW_SCHEMES)
+def test_jax_engines_bitwise_with_gc(scheme, selector):
+    """With GC active, single-volume `simulate_jax`, the homogeneous
+    fleet-of-1, and the heterogeneous fleet-of-1 agree bit-identically —
+    summaries and the full final state including the scheme slice. (The
+    differential harness runs the same gate over every scheme × selector;
+    this is the focused always-on check for the shared-classifier ports.)"""
+    tr = np.asarray(make_fleet("mixed", 1, N, 4 * N, seed=23)[0], np.int32)
+    cfg = JaxSimConfig(n_lbas=N, segment_size=SEG, scheme=scheme,
+                       selector=selector, gp_threshold=0.15,
+                       class_slots=6)
+    single = simulate_jax(tr, cfg)
+    assert single["gc_writes"] > 0               # GC actually exercised
+    lone = simulate_fleet([tr], cfg)["volumes"][0]
+    policy = encode_policies(1, schemes=[scheme], selectors=[selector],
+                             gp_thresholds=0.15)
+    het, st = simulate_fleet_hetero([tr], cfg, policy, return_state=True)
+    hvol = het["volumes"][0]
+    for summary in (lone, hvol):
+        assert summary["wa"] == single["wa"]
+        assert summary["gc_writes"] == single["gc_writes"]
+        assert summary["reclaimed"] == single["reclaimed"]
+        assert summary["class_user_writes"] == single["class_user_writes"]
+        assert summary["class_gc_writes"] == single["class_gc_writes"]
+    ref = jax.device_get(_run(cfg, tr))
+    vol = jax.tree_util.tree_map(lambda x: x[0], st)
+    for key in ref:
+        if key.startswith("p_"):
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(vol[key]), np.asarray(ref[key]),
+            err_msg=f"state[{key}] diverged")
+
+
+# -- decay-boundary unit tests -------------------------------------------------
+
+def test_eti_halving_tick_boundary():
+    """The lazy fold decays exactly at the 2^15-write halving tick: the
+    write *completing* a decay period classifies against the halved temps
+    (increment → tick → classify ordering), one write earlier it does not."""
+    D = ts.ETI_DECAY_EVERY
+    events_pre = [("user", 0, 0), ("user", D - 2, 0)]
+    events_at = [("user", 0, 0), ("user", D - 1, 0)]
+    np_pre, jx_pre, p_pre, st_pre = _drive_pair("eti", events_pre)
+    np_at, jx_at, p_at, st_at = _drive_pair("eti", events_at)
+    assert np_pre == jx_pre and np_at == jx_at
+    # with one extent (N <= extent_blocks) temp can never exceed the mean,
+    # so assert on the folded counters instead of the hot/cold class:
+    # at D-2 the classify epoch is still 0 (count stays 2); the write at
+    # D-1 completes the period — classify epoch 1 halves it
+    assert p_pre.count[0] == 2 and p_pre.last[0] == 0
+    assert p_at.count[0] == 2 and p_at.last[0] == 0
+    assert int(ts.eti_fold(p_pre.count[0], p_pre.last[0],
+                           np.int32((D - 1) // D))) == 2
+    assert int(ts.eti_fold(p_at.count[0], p_at.last[0],
+                           np.int32(D // D))) == 1
+    # the hot/cold flip at the tick, via the shared classifier on a
+    # two-extent table: [2, 0] is hot (2 > max(mean=1, 1)) before the tick,
+    # halved [1, 0] is not (1 > max(0.5 -> 1) fails)
+    counts = np.array([2, 0], np.int32)
+    lasts = np.zeros(2, np.int32)
+    assert int(ts.eti_user_class(counts, lasts, np.int32(0), np.int32(0))) == 0
+    assert int(ts.eti_user_class(counts, lasts, np.int32(1), np.int32(0))) == 1
+
+
+def test_fadac_half_life_boundary():
+    """A count of 1 survives until exactly ``half_life`` has elapsed since
+    its update, then halves to 0 — class 4 -> 5 across the boundary, on
+    both backends via the GC read path."""
+    H = ts.FADAC_HALF_LIFE
+    for t_read, want_cls in ((H - 1, 4), (H, 5)):
+        events = [("user", 0, 0),
+                  ("gc", t_read, np.zeros(2, np.int64), np.zeros(2, np.int64))]
+        out_np, out_jx, _, _ = _drive_pair("fadac", events)
+        assert out_np == out_jx
+        assert out_np[1] == out_np[2] == want_cls, t_read
+    # and idempotence at the boundary: folding at t then again at t is a no-op
+    folded = ts.fadac_fold(np.int32(1), np.int32(0), np.int32(H))
+    assert int(ts.fadac_fold(folded, np.int32(H), np.int32(H))) == int(folded)
+
+
+def test_mq_expiry_demotion_boundary():
+    """Expiry demotes strictly *after* ``expire``: at t == expire the level
+    holds; at t == expire + 1 it drops one. The shared function is probed
+    directly (in the ladder's own induction ``level == ladder(freq)``, so
+    the demoted branch is reachable only through state the original never
+    quite exposes — exactly why the boundary needs a unit test)."""
+    lvl_prev, freq, expire = np.int32(3), np.int32(2), np.int32(10)
+    cls_hold, lvl_hold = ts.mq_user(freq, lvl_prev, expire, np.int32(10))
+    cls_drop, lvl_drop = ts.mq_user(freq, lvl_prev, expire, np.int32(11))
+    assert int(lvl_hold) == 3 and int(cls_hold) == 1
+    assert int(lvl_drop) == 2 and int(cls_drop) == 2
+    # level 0 never demotes below 0
+    _, lvl0 = ts.mq_user(np.int32(1), np.int32(0), expire, np.int32(99))
+    assert int(lvl0) == 0
+    # end-to-end: both backends agree across a long expiry gap
+    events = [("user", t, 0) for t in (0, 1, 2, 3, 2000, 2001)]
+    out_np, out_jx, placement, st = _drive_pair("mq", events)
+    assert out_np == out_jx
+    np.testing.assert_array_equal(placement.level,
+                                  np.asarray(st["sch_mq_level"]))
+
+
+def test_warcip_first_write_unknown_interval():
+    """The first write to an LBA has no rewrite interval: class is the
+    coldest user cluster (4) and the centroids stay untouched; the second
+    write clusters and moves exactly one centroid — identically on both
+    backends."""
+    out_np, out_jx, placement, st = _drive_pair("warcip", [("user", 7, 3)])
+    assert out_np == out_jx == [4]
+    np.testing.assert_array_equal(placement.centroids,
+                                  np.asarray(ts.WARCIP_CENTROID_INIT,
+                                             np.float32))
+    np.testing.assert_array_equal(np.asarray(st["sch_warcip_cent"]),
+                                  placement.centroids)
+    out_np2, out_jx2, p2, st2 = _drive_pair(
+        "warcip", [("user", 7, 3), ("user", 19, 3)])
+    assert out_np2 == out_jx2
+    assert 0 <= out_np2[1] < 5                   # a real cluster id now
+    moved = p2.centroids != np.asarray(ts.WARCIP_CENTROID_INIT, np.float32)
+    assert moved.sum() == 1                      # exactly one centroid moved
+    np.testing.assert_array_equal(p2.centroids,
+                                  np.asarray(st2["sch_warcip_cent"]))
+    np.testing.assert_array_equal(p2.counts, np.asarray(st2["sch_warcip_cnt"]))
+
+
+def test_sfr_sequentiality_reset():
+    """A write to ``prev_lba + 1`` scores as sequential: the 0.2 randomness
+    term drops out, the score falls, and the block lands in a *colder*
+    (higher-numbered) class than the same write off-run. Any non-adjacent
+    LBA resets the run. Both backends agree step for step."""
+    seq = [("user", 0, 10), ("user", 1, 11)]          # sequential pair
+    non = [("user", 0, 10), ("user", 1, 13)]          # same chunk, non-seq
+    out_seq_np, out_seq_jx, p_seq, st_seq = _drive_pair("sfr", seq)
+    out_non_np, out_non_jx, _, _ = _drive_pair("sfr", non)
+    assert out_seq_np == out_seq_jx
+    assert out_non_np == out_non_jx
+    # the sequential write's score is exactly 0.2 lower -> colder bucket
+    assert out_seq_np[1] > out_non_np[1]
+    assert p_seq.prev_lba == 11
+    assert int(st_seq["sch_sfr_prev"]) == 11
+    # the reset: after a non-adjacent write, prev no longer chains
+    out3_np, out3_jx, _, _ = _drive_pair(
+        "sfr", [("user", 0, 10), ("user", 1, 13), ("user", 2, 11)])
+    assert out3_np == out3_jx

@@ -271,6 +271,82 @@ def test_idle_window_watermark_prevents_exhaustion(lbas, schemes):
     assert res["fleet"]["overflow"] == 0
 
 
+# -- shared temperature-classifier invariants ---------------------------------
+# Pure-numpy properties of repro.core.placement.temperature_shared — the
+# module both backends execute verbatim, so one property run covers numpy
+# and JAX semantics at once (tests/test_registry.py holds the deterministic
+# mirrors; tests/test_conformance.py pins the backend-parity half).
+
+
+@given(st.integers(0, 2**30), st.integers(0, 100),
+       st.integers(0, 100), st.integers(0, 100))
+def test_eti_fold_time_translation(count, last, d1, d2):
+    """Lazy decay is path-independent: folding to an intermediate epoch and
+    then to the final epoch equals folding straight to the final epoch, so
+    *when* the counter is observed never changes what it decays to."""
+    from repro.core.placement import temperature_shared as ts
+    c = np.int32(count)
+    e0 = np.int32(last)
+    e1 = np.int32(last + d1)
+    e2 = np.int32(last + d1 + d2)
+    via = ts.eti_fold(ts.eti_fold(c, e0, e1), e1, e2)
+    direct = ts.eti_fold(c, e0, e2)
+    assert int(via) == int(direct)
+    assert 0 <= int(direct) <= count
+
+
+@given(st.integers(0, 2**30), st.integers(0, 2**20), st.integers(0, 2**20))
+def test_fadac_fold_idempotent_and_monotone(count, last, dt):
+    """Folding at the same instant twice is a no-op (lazy decay reads are
+    side-effect-free in time), and a later read never sees a hotter value."""
+    from repro.core.placement import temperature_shared as ts
+    c, l0 = np.int32(count), np.int32(last)
+    now = np.int32(last + dt)
+    once = ts.fadac_fold(c, l0, now)
+    assert int(ts.fadac_fold(once, now, now)) == int(once)
+    later = ts.fadac_fold(c, l0, np.int32(last + dt + ts.FADAC_HALF_LIFE))
+    assert 0 <= int(later) <= int(once) <= count
+
+
+@given(st.lists(st.integers(1, 2**24), min_size=1, max_size=120))
+def test_warcip_centroids_finite_under_any_drive(intervals):
+    """Whatever rewrite-interval sequence arrives, the running k-means stays
+    well-behaved: centroids finite f32, counts monotone from 1, and every
+    assignment a real cluster id."""
+    from repro.core.placement import temperature_shared as ts
+    cent = np.asarray(ts.WARCIP_CENTROID_INIT, np.float32)
+    cnt = np.ones(len(cent), np.float32)
+    for dt in intervals:
+        li = ts.warcip_interval(np.int32(dt))
+        assert np.isfinite(float(li))
+        j = int(ts.warcip_assign(cent, li))
+        assert 0 <= j < len(cent)
+        cent[j], cnt[j] = ts.warcip_update(cent[j], cnt[j], li)
+    assert np.all(np.isfinite(cent)) and cent.dtype == np.float32
+    assert np.all(cnt >= 1.0)
+
+
+@given(st.integers(0, 2**30), st.integers(0, 4), st.integers(-2**30, 2**30),
+       st.integers(0, 2**30))
+def test_shared_classifiers_class_budget(freq, level, expire, t):
+    """For arbitrary (even adversarial) state, every shared classifier's
+    output stays inside its scheme's declared class budget — the same bound
+    the analyzer proves on the jaxpr (SA301) and the fleet property
+    ``test_scheme_class_ids_within_declared_budget`` observes end-to-end."""
+    from repro.core.placement import temperature_shared as ts
+    cls, lvl = ts.mq_user(np.int32(freq), np.int32(level), np.int32(expire),
+                          np.int32(t))
+    assert 0 <= int(cls) <= ts.MQ_USER_CLASSES - 1 and 0 <= int(lvl) <= 4
+    score = ts.sfr_score(np.float32(freq % 1000), np.int32(t),
+                         np.float32(level % 2))
+    assert 0 <= int(ts.sfr_class(score)) <= 5
+    assert 0 <= int(ts.fadac_class(np.int32(freq))) <= 5
+    counts = np.asarray([freq % 65536, 0], np.int32)
+    lasts = np.zeros(2, np.int32)
+    cls_eti = ts.eti_user_class(counts, lasts, np.int32(t % 1024), np.int32(0))
+    assert 0 <= int(cls_eti) <= 2
+
+
 @given(st.lists(st.integers(1, 200), min_size=4, max_size=60))
 def test_logkv_tables_consistent(page_counts):
     """Whatever the traffic, page tables always point at live pages of the
